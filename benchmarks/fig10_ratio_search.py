@@ -1,0 +1,29 @@
+"""Paper Fig. 10 / Algorithm 1 — decoding uncertainty (UQEst) across
+precision-ratio splits under a memory budget; the search's pick is marked.
+Runs the real (tiny) model."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.configs.base import get_config
+from repro.core import ratio_search
+from repro.models import transformer as T
+
+
+def run():
+    cfg = get_config("qwen2.5-14b", tiny=True)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg, dtype=jnp.float32, m2=True)
+    prompts = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    res = ratio_search.search(cfg, params, prompts, memory_budget=0.25,
+                              gen_len=6)
+    rows = []
+    for t in res.table:
+        tag = " <= Algorithm-1 pick" if t["ratio"] == res.best_ratio else ""
+        uq = "inf" if t["uq"] == float("inf") else f"{t['uq']:.2f}"
+        rows.append(row(
+            f"fig10.ratio.fp{t['ratio'][0]:.2f}_i8{t['ratio'][1]:.2f}"
+            f"_i4{t['ratio'][2]:.2f}", 0.0,
+            f"uq={uq} mem={t['mem_cost']:.3f}"
+            f"{' feasible' if t['feasible'] else ' over-budget'}{tag}"))
+    return rows

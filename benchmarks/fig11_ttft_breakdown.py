@@ -1,0 +1,34 @@
+"""Paper Fig. 11 — (a) time-to-first-token and (b) GPU-time breakdown
+(compute vs DRAM→HBM load vs SSD stall) per model."""
+import tempfile
+
+from benchmarks.common import row
+from repro.core.engine import PAPER_MODELS, M2CacheEngine
+from repro.core.hw import HOST
+
+
+def run(gen_len: int = 8):
+    rows = []
+    for name in ("llama-7b", "llama-13b", "llama-70b", "falcon-40b"):
+        m = PAPER_MODELS[name]
+        eng = M2CacheEngine(paper_model=name, mode="m2cache",
+                            dram_capacity_gb=56.0,
+                            ssd_dir=tempfile.mkdtemp(prefix="m2bench_"))
+        res = eng.generate(gen_len=gen_len)
+        # TTFT = prefill(full dense pass over prompt, weights streamed once)
+        prompt = 64
+        layer_bytes = eng._layer_bytes_fp16()
+        flops = eng._layer_flops_dense() * m.num_layers * prompt
+        ttft = max(flops / (HOST.flops * HOST.flop_util),
+                   m.num_layers * layer_bytes / HOST.pcie_bw)
+        comp = sum(r.compute_s for r in res.token_reports)
+        load = sum(r.hbm_load_s for r in res.token_reports)
+        stall = sum(r.ssd_stall_s for r in res.token_reports)
+        tot = max(res.modeled_s, 1e-12)
+        rows.append(row(f"fig11.{name}.ttft", ttft * 1e6,
+                        f"{ttft:.2f} s (prompt {prompt})"))
+        rows.append(row(
+            f"fig11.{name}.breakdown", res.modeled_s * 1e6,
+            f"compute {comp / tot:.0%} | hbm-load {load / tot:.0%} | "
+            f"ssd-stall {stall / tot:.0%}"))
+    return rows

@@ -1,0 +1,37 @@
+"""Paper Fig. 13 — step-by-step ablation on LLaMA-13B:
+ZeRO-Inference → +MP Inference → +HBM cache (LRU and ATU) → +SSDs.
+Reports decoding speed, carbon, and DRAM footprint per stage."""
+import tempfile
+
+from benchmarks.common import row
+from repro.core.engine import M2CacheEngine
+
+
+def _stage(name, **kw):
+    eng = M2CacheEngine(paper_model="llama-13b",
+                        ssd_dir=tempfile.mkdtemp(prefix="m2bench_"), **kw)
+    return eng.generate(gen_len=10)
+
+
+def run():
+    stages = [
+        ("baseline_zero_infinity", dict(mode="zero_infinity")),
+        ("+mp_inference", dict(mode="m2cache", hbm_policy="none",
+                               use_ssd=False, dram_capacity_gb=64.0)),
+        ("+lru_cache", dict(mode="m2cache", hbm_policy="lru",
+                            use_ssd=False, dram_capacity_gb=64.0)),
+        ("+atu_cache", dict(mode="m2cache", hbm_policy="atu",
+                            use_ssd=False, dram_capacity_gb=64.0)),
+        ("+ssds", dict(mode="m2cache", hbm_policy="atu",
+                       use_ssd=True, dram_capacity_gb=14.0)),
+    ]
+    rows = []
+    for name, kw in stages:
+        r = _stage(name, **kw)
+        dram = r.cache_stats.get("dram_used_gb",
+                                 26.0 if "zero" in name else 0.0)
+        rows.append(row(
+            f"fig13.{name}", r.modeled_s / 10 * 1e6,
+            f"{r.tokens_per_s:.2f} tok/s | {r.carbon['total_g']:.3f} gCO2 "
+            f"| dram {dram:.1f} GB"))
+    return rows

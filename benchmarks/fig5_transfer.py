@@ -1,0 +1,55 @@
+"""Paper Fig. 5 — transfer time / effective bandwidth vs tensor size:
+neuron-granular copies run far below peak (the reason ATU batches diffs into
+one contiguous compacted copy). Measured with real numpy copies (host) —
+the *shape* of the curve (small copies lose an order of magnitude) is the
+paper's point; absolute numbers are this container's memory system."""
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+
+def _copy_bw(nbytes: int, repeats: int = 5):
+    src = np.random.default_rng(0).standard_normal(nbytes // 8)
+    dst = np.empty_like(src)
+    # per-neuron copies: many small slices
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        np.copyto(dst, src)
+    dt = (time.perf_counter() - t0) / repeats
+    return dt, nbytes / dt
+
+
+def run():
+    rows = []
+    sizes = [4 << 10, 64 << 10, 1 << 20, 16 << 20]
+    bws = []
+    for nb in sizes:
+        dt, bw = _copy_bw(nb)
+        bws.append(bw)
+        rows.append(row(f"fig5.copy.{nb >> 10}KiB", dt * 1e6,
+                        f"{bw / 1e9:.2f} GB/s"))
+
+    # scattered neuron-level copies vs one compacted gather (ATU's win).
+    # Neurons are stored row-major ((f, d): one neuron = one contiguous
+    # row), matching the SSD tier layout for gathers.
+    d, k, f = 4096, 512, 8192
+    bank = np.random.default_rng(1).standard_normal((f, d)).astype(np.float16)
+    idx = np.sort(np.random.default_rng(2).choice(f, k, replace=False))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        unit = np.empty((k, d), np.float16)
+        for j, c in enumerate(idx):           # per-neuron copies
+            unit[j, :] = bank[c, :]
+    per_neuron = (time.perf_counter() - t0) / 3
+    t0 = time.perf_counter()
+    for _ in range(3):
+        unit2 = np.take(bank, idx, axis=0)    # one batched gather
+    batched = (time.perf_counter() - t0) / 3
+    rows.append(row("fig5.per_neuron_copies", per_neuron * 1e6,
+                    f"{k} x {d * 2}B copies"))
+    rows.append(row("fig5.batched_gather", batched * 1e6,
+                    f"{per_neuron / batched:.1f}x faster (ATU compaction; "
+                    f"paper Fig.5: ~10x small-copy penalty on HBM)"))
+    return rows

@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run JSONs (deliverable g).
+
+Reads results/dryrun/*.json, prints the three terms per (arch × shape ×
+mesh), the dominant bottleneck, and the useful-FLOPs ratio; writes
+results/roofline.csv for EXPERIMENTS.md."""
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(pattern: str = "*__dense.json"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def run():
+    recs = load_records()
+    rows = []
+    csv_lines = ["arch,shape,mesh,compute_s,memory_s,collective_s,"
+                 "bottleneck,useful_flops_ratio,mem_gb_per_dev"]
+    for r in recs:
+        rf = r["roofline"]
+        mem = (r.get("memory") or {}).get("per_device_gb", -1)
+        csv_lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{rf['compute_s']:.4g},"
+            f"{rf['memory_s']:.4g},{rf['collective_s']:.4g},"
+            f"{rf['bottleneck']},{rf['useful_flops_ratio']:.3f},{mem:.2f}")
+        rows.append(row(
+            f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+            max(rf["compute_s"], rf["memory_s"], rf["collective_s"]) * 1e6,
+            f"bound={rf['bottleneck']} c={rf['compute_s']:.3g}s "
+            f"m={rf['memory_s']:.3g}s coll={rf['collective_s']:.3g}s "
+            f"useful={rf['useful_flops_ratio']:.2f}"))
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.csv", "w") as f:
+        f.write("\n".join(csv_lines) + "\n")
+    if not rows:
+        rows.append(row("roofline.missing", 0.0,
+                        "run repro.launch.dryrun first"))
+    return rows

@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure (+ roofline &
+kernels). Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig9,fig12]
+"""
+import argparse
+import glob
+import shutil
+import sys
+import traceback
+
+
+def _cleanup_tmp():
+    """Engine SSD-tier surrogates are GB-scale memmaps — reclaim between
+    benchmark modules."""
+    for d in glob.glob("/tmp/m2bench_*") + glob.glob("/tmp/m2cache_ssd_*"):
+        shutil.rmtree(d, ignore_errors=True)
+
+MODULES = [
+    ("fig4", "benchmarks.fig4_media_latency"),
+    ("fig5", "benchmarks.fig5_transfer"),
+    ("fig6", "benchmarks.fig6_overlap"),
+    ("fig9", "benchmarks.fig9_generation_speed"),
+    ("fig10", "benchmarks.fig10_ratio_search"),
+    ("fig11", "benchmarks.fig11_ttft_breakdown"),
+    ("fig12", "benchmarks.fig12_carbon"),
+    ("fig13", "benchmarks.fig13_ablation"),
+    ("tab14", "benchmarks.tab14_accuracy"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    print("name,us_per_call,derived")
+    failed = 0
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for r in mod.run():
+                derived = str(r["derived"]).replace(",", ";")
+                print(f"{r['name']},{r['us_per_call']:.2f},{derived}",
+                      flush=True)
+        except Exception:
+            failed += 1
+            print(f"{tag}.ERROR,0,{traceback.format_exc(limit=1).splitlines()[-1]}",
+                  flush=True)
+        finally:
+            _cleanup_tmp()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

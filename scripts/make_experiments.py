@@ -1,0 +1,83 @@
+"""Assemble EXPERIMENTS.md tables from results/dryrun JSONs.
+
+Usage: PYTHONPATH=src python scripts/make_experiments.py > results/tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+DIR = "results/dryrun"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def load(pattern):
+    out = []
+    for f in sorted(glob.glob(os.path.join(DIR, pattern))):
+        r = json.load(open(f))
+        r["_file"] = os.path.basename(f)
+        out.append(r)
+    return out
+
+
+def table(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | mesh | compute | memory | collective | bound | "
+          "useful | GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} | "
+                  f"FAIL: {r.get('error','')[:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        mem = (r.get("memory") or {}).get("per_device_gb", -1)
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+              f"{fmt_s(rf['collective_s'])} | {rf['bottleneck']} | "
+              f"{rf['useful_flops_ratio']:.2f} | {mem:.1f} |")
+
+
+def main():
+    dense_single = [r for r in load("*__single__dense.json")]
+    dense_multi = [r for r in load("*__multi__dense.json")]
+    m2 = [r for r in load("*__single__m2.json")]
+    tagged = [r for r in load("*dense_*.json")] + \
+        [r for r in load("*__m2_*.json")]
+
+    n_ok = sum(1 for r in dense_single + dense_multi
+               if r.get("status") == "ok")
+    print(f"## Generated dry-run summary\n")
+    print(f"- dense combos OK: {n_ok}/{len(dense_single) + len(dense_multi)}")
+    print(f"- m2 decode combos OK: "
+          f"{sum(1 for r in m2 if r.get('status') == 'ok')}/{len(m2)}")
+    table(dense_single, "Baseline roofline — single pod (16×16, 256 chips)")
+    table(dense_multi, "Baseline roofline — multi-pod (2×16×16, 512 chips)")
+    table(m2, "M2Cache (paper technique, in-graph) — decode_32k, single pod")
+    if tagged:
+        table(tagged, "Perf-iteration runs (tagged)")
+
+    # collective schedule digest for §Dry-run
+    print("\n### Collective schedule digest (single pod, per device per step)\n")
+    print("| arch | shape | all-gather | all-reduce | a2a | permute |")
+    print("|---|---|---|---|---|---|")
+    for r in dense_single:
+        if r.get("status") != "ok":
+            continue
+        c = r["roofline"]["collectives"]
+        g = lambda k: (f"{c[k]['bytes'] / 2**30:.2f}GiB×{c[k]['count']}"
+                       if k in c else "—")
+        print(f"| {r['arch']} | {r['shape']} | {g('all-gather')} | "
+              f"{g('all-reduce')} | {g('all-to-all')} | "
+              f"{g('collective-permute')} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Multi-level cache manager: HBM(ATU) / DRAM(two-level) / SSD + transfer
+clock (paper §5 Fig. 2).
+
+The manager advances a modeled clock per layer per token:
+
+  t_layer = max(t_compute, t_hbm_load) + t_ssd_stall
+
+i.e. DRAM→HBM neuron loads overlap compute (the paper's asynchronous
+loading via dedicated CUDA streams → here async DMA), and SSD→DRAM preloads
+overlap everything except when the compute front catches an unfinished load.
+
+Real byte movement happens through the SSDTier (memmap I/O) and numpy
+copies; the *clock* prices them with the paper's testbed bandwidths
+(core/hw.py), so modeled token rates are comparable with the paper's Fig. 9
+even though this container has no GPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cache.dram_cache import DRAMCache
+from repro.core.cache.hbm_cache import HBMCache
+from repro.core.cache.preloader import Preloader
+from repro.core.cache.ssd_tier import SSDTier
+from repro.core.hw import HOST, HostHW
+from repro.core.quantize import bytes_per_neuron
+
+
+@dataclasses.dataclass
+class TokenReport:
+    modeled_s: float
+    compute_s: float
+    hbm_load_s: float
+    ssd_stall_s: float
+    bytes_hbm: float
+    bytes_ssd: int
+    hbm_hit_ratio: float
+
+
+class MultiLevelCacheManager:
+    """Drives the tiered caches for one model during decoding."""
+
+    def __init__(self, *, num_layers: int, d_model: int, d_ff: int,
+                 active_per_layer: int, ssd: SSDTier,
+                 dram_capacity_bytes: int, n_fixed: int = 2,
+                 hbm_policy: str = "atu", use_ssd: bool = True,
+                 lookahead: int = 2, hw: HostHW = HOST,
+                 layer_flops: float = 0.0, byte_scale: float = 1.0,
+                 ssd_miss_frac: float = 1.0):
+        self.num_layers = num_layers
+        self.d_model = d_model
+        self.hw = hw
+        self.use_ssd = use_ssd
+        self.ssd = ssd
+        self.dram = DRAMCache(dram_capacity_bytes, n_fixed=n_fixed,
+                              byte_scale=byte_scale)
+        self.hbm = HBMCache(num_layers, active_per_layer, d_model,
+                            policy=hbm_policy)
+        self.preloader = Preloader(ssd, self.dram, num_layers=num_layers,
+                                   ssd_bw=hw.ssd_bw, lookahead=lookahead,
+                                   byte_scale=byte_scale,
+                                   miss_frac=ssd_miss_frac)
+        self.layer_flops = layer_flops
+        self.clock = 0.0
+        if not use_ssd:
+            # whole model pinned in DRAM (paper ablation "+LRU Cache" stage)
+            for l in range(num_layers):
+                self.dram.insert(l, ssd.read_layer(l))
+                self.dram.n_fixed = num_layers   # pin everything
+        else:
+            self.clock = self.preloader.warmup(0.0)
+
+    # ------------------------------------------------------------------
+    def compute_time(self, active: int, tiers: Dict[int, str]) -> float:
+        """Modeled GPU time for one layer's sparse FFN."""
+        flops = self.layer_flops if self.layer_flops else \
+            6.0 * active * self.d_model   # 3 matvecs, 2 flops/MAC
+        return flops / (self.hw.flops * self.hw.flop_util)
+
+    def process_token(self, active_sets: Sequence[Sequence[int]],
+                      tier_maps: Sequence[Dict[int, str]]) -> TokenReport:
+        """One decode step: per layer, update caches and advance the clock.
+
+        active_sets[l] — the predictor's active neuron ids for layer l
+        (rank-sorted); tier_maps[l] — neuron id -> precision tier.
+        """
+        t_compute = t_hbm = t_stall = 0.0
+        bytes_hbm = 0.0
+        ssd_before = self.ssd.bytes_read
+        for l in range(self.num_layers):
+            now = self.clock
+            stall = self.preloader.step(l, now) if self.use_ssd else 0.0
+            s = self.hbm.update_layer(l, active_sets[l], tier_maps[l])
+            # paper Fig. 5: neuron-granular HBM copies run below peak PCIe
+            load_s = s.bytes_loaded \
+                / (self.hw.pcie_bw * self.hw.pcie_scatter_eff) \
+                + s.copies * 5e-6            # per-copy launch latency
+            comp_s = self.compute_time(len(active_sets[l]), tier_maps[l])
+            layer_s = max(comp_s, load_s) + stall
+            self.clock += layer_s
+            t_compute += comp_s
+            t_hbm += load_s
+            t_stall += stall
+            bytes_hbm += s.bytes_loaded
+        total = self.hbm.total
+        denom = total.loaded + total.hit
+        return TokenReport(
+            modeled_s=t_compute + max(0.0, t_hbm - t_compute) + t_stall,
+            compute_s=t_compute, hbm_load_s=t_hbm, ssd_stall_s=t_stall,
+            bytes_hbm=bytes_hbm,
+            bytes_ssd=int((self.ssd.bytes_read - ssd_before)
+                          * self.preloader.byte_scale),
+            hbm_hit_ratio=(total.hit / denom if denom else 0.0))
+
+
+def zero_infinity_token_time(*, num_layers: int, layer_bytes_fp16: float,
+                             layer_flops: float, hw: HostHW = HOST) -> float:
+    """Modeled per-token latency of the ZeRO-Inference baseline: every layer's
+    full FP16 weights stream HBM←DRAM/SSD each step (no sparsity, no reuse —
+    bandwidth-overwhelming by construction)."""
+    per_layer_io = layer_bytes_fp16 / hw.pcie_bw
+    per_layer_compute = layer_flops / (hw.flops * hw.flop_util)
+    return num_layers * max(per_layer_io, per_layer_compute)

@@ -1,0 +1,97 @@
+"""Carbon-footprint model (paper §2.2 Formula 1, §6 Fig. 12/13).
+
+CF = ECE + OCE
+  ECE — embodied carbon, amortised over device lifespan by runtime share.
+  OCE — operational carbon = energy(kWh) × grid carbon intensity.
+
+Constants follow the paper's evaluation section: DRAM 26 W / 256 GB,
+SSD 2 W, grid intensity 820 gCO2/kWh, plus published TDPs / embodied
+estimates per accelerator (A100 embodied ≈150 kgCO2, Luccioni et al.).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+GRID_INTENSITY_G_PER_KWH = 820.0          # paper Fig. 13 caption
+DRAM_W_PER_GB = 26.0 / 256.0              # paper Fig. 13 caption
+SSD_W = 2.0                               # paper Fig. 13 caption
+LIFESPAN_S = 5 * 365 * 24 * 3600.0        # 5-year amortisation
+
+
+@dataclasses.dataclass(frozen=True)
+class Device:
+    name: str
+    tdp_w: float            # operational power at inference load
+    embodied_gco2: float    # manufacturing footprint
+    hbm_gb: float
+
+
+DEVICES: Dict[str, Device] = {
+    # old-fashioned GPUs (the paper's deployment target)
+    "m40": Device("m40", 250.0, 45_000.0, 24.0),
+    "k40": Device("k40", 235.0, 40_000.0, 12.0),
+    "rtx3090": Device("rtx3090", 350.0, 50_000.0, 24.0),
+    "rtx4090": Device("rtx4090", 450.0, 60_000.0, 24.0),
+    # top-tier GPUs
+    "v100": Device("v100", 300.0, 100_000.0, 32.0),
+    "a100": Device("a100", 400.0, 150_000.0, 80.0),
+    "h100": Device("h100", 700.0, 160_000.0, 80.0),
+    # the TPU target of this repo (per-chip)
+    "tpu_v5e": Device("tpu_v5e", 200.0, 70_000.0, 16.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyBreakdown:
+    accelerator_j: float
+    dram_j: float
+    ssd_j: float
+
+    @property
+    def total_j(self) -> float:
+        return self.accelerator_j + self.dram_j + self.ssd_j
+
+
+def operational_carbon(energy: EnergyBreakdown,
+                       intensity: float = GRID_INTENSITY_G_PER_KWH) -> float:
+    """gCO2 from energy use."""
+    kwh = energy.total_j / 3.6e6
+    return kwh * intensity
+
+
+def embodied_carbon(device: Device, runtime_s: float,
+                    lifespan_s: float = LIFESPAN_S) -> float:
+    """gCO2 amortised share of manufacturing footprint."""
+    return device.embodied_gco2 * (runtime_s / lifespan_s)
+
+
+def inference_energy(runtime_s: float, *, device: Device,
+                     accelerator_util: float,
+                     dram_gb: float, ssd_active: bool) -> EnergyBreakdown:
+    """Energy for one serving interval.
+
+    ``accelerator_util`` scales accelerator power with compute activity —
+    MP Inference's FLOP reduction shows up here (paper: "MP Inference
+    decreases computational carbon by using only a subset of neurons").
+    """
+    acc = device.tdp_w * (0.25 + 0.75 * accelerator_util) * runtime_s
+    dram = DRAM_W_PER_GB * dram_gb * runtime_s
+    ssd = (SSD_W if ssd_active else 0.0) * runtime_s
+    return EnergyBreakdown(acc, dram, ssd)
+
+
+def total_carbon(runtime_s: float, *, device_name: str,
+                 accelerator_util: float, dram_gb: float,
+                 ssd_active: bool,
+                 intensity: float = GRID_INTENSITY_G_PER_KWH,
+                 include_embodied: bool = True) -> Dict[str, float]:
+    dev = DEVICES[device_name]
+    e = inference_energy(runtime_s, device=dev,
+                         accelerator_util=accelerator_util,
+                         dram_gb=dram_gb, ssd_active=ssd_active)
+    oce = operational_carbon(e, intensity)
+    ece = embodied_carbon(dev, runtime_s) if include_embodied else 0.0
+    return {"oce_g": oce, "ece_g": ece, "total_g": oce + ece,
+            "energy_j": e.total_j, "accelerator_j": e.accelerator_j,
+            "dram_j": e.dram_j, "ssd_j": e.ssd_j}

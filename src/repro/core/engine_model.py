@@ -1,0 +1,105 @@
+"""Real-model execution helpers for the serving engine.
+
+``RealModelRunner`` drives jit'd prefill/decode with the in-graph
+MP-Inference path and surfaces per-layer active-neuron indices so the
+multi-level cache manager replays *actual* predictor behaviour.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+def flatten_active_idx(cfg, aux_idx) -> List[np.ndarray]:
+    """aux['active_idx'] -> flat per-layer list in layer order.
+
+    Pattern entries are stacked (F, k); layer l = repeat*len(pat)+pos.
+    Layers without M2 FFNs (ssm) yield empty arrays.
+    """
+    pat, F, rem = T.pattern_split(cfg)
+    out: List[np.ndarray] = []
+    pattern = [np.asarray(a) for a in aux_idx["pattern"]]
+    for r in range(F):
+        for p in range(len(pat)):
+            arr = pattern[p]
+            out.append(arr[r] if arr.size else np.zeros((0,), np.int32))
+    for a in aux_idx["remainder"]:
+        a = np.asarray(a)
+        out.append(a if a.size else np.zeros((0,), np.int32))
+    return out
+
+
+class RealModelRunner:
+    def __init__(self, cfg, params, *, max_seq: int, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.dtype = dtype
+
+        def prefill(params, tokens):
+            B = tokens.shape[0]
+            cache = T.init_cache(cfg, B, max_seq=max_seq, dtype=dtype)
+            logits, cache, aux = T.forward(cfg, params, tokens, cache=cache,
+                                           mode="prefill", m2=True)
+            return logits[..., -1, :], cache, aux["active_idx"]
+
+        def decode(params, cache, tok):
+            logits, cache, aux = T.forward(cfg, params, tok, cache=cache,
+                                           mode="decode", m2=True)
+            return logits[..., 0, :], cache, aux["active_idx"]
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    def generate(self, prompts, gen_len: int
+                 ) -> Tuple[np.ndarray, List[List[np.ndarray]]]:
+        """Greedy decode. Returns (tokens (B, gen_len), active-idx per step)."""
+        prompts = jnp.asarray(prompts)
+        last, cache, _ = self._prefill(self.params, prompts)
+        outs, idx_steps = [], []
+        for _ in range(gen_len):
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            outs.append(np.asarray(nxt))
+            if self.cfg.family == "audio":
+                tok = jnp.broadcast_to(
+                    nxt[:, None, None],
+                    (nxt.shape[0], self.cfg.num_codebooks, 1))
+            else:
+                tok = nxt[:, None]
+            last, cache, aux_idx = self._decode(self.params, cache, tok)
+            idx_steps.append(flatten_active_idx(self.cfg, aux_idx))
+        return np.stack(outs, axis=-1), idx_steps
+
+
+def extract_layer_banks(cfg, params) -> List[dict]:
+    """Per-layer quantized neuron banks (numpy) for the SSD tier, in layer
+    order. Layers without banks (ssm) contribute their raw weights so the
+    cache tier still streams them."""
+    pat, F, rem = T.pattern_split(cfg)
+    out = []
+
+    def banks_of(layer_p, kind, r=None):
+        take = (lambda a: np.asarray(a[r]) if r is not None
+                else np.asarray(a))
+        if kind != "ssm" and "ffn" in layer_p and "banks" in layer_p["ffn"]:
+            return {k: take(v) for k, v in layer_p["ffn"]["banks"].items()}
+        if kind == "ssm":
+            return {"w_in": take(layer_p["w_in"]),
+                    "w_out": take(layer_p["w_out"])}
+        # MoE: stream expert weights (expert = coarse neuron group)
+        if "ffn" in layer_p and "wg" in layer_p["ffn"]:
+            return {k: take(layer_p["ffn"][k]) for k in ("wg", "wu", "wd")}
+        return {}
+
+    for r in range(F):
+        for pos, kind in enumerate(pat):
+            out.append(banks_of(params["layers"]["pattern"][pos], kind, r))
+    for i, kind in enumerate(pat[:rem]):
+        out.append(banks_of(params["layers"]["remainder"][i], kind))
+    return out

@@ -1,0 +1,39 @@
+"""Hardware constants for the transfer-clock model and rooflines.
+
+GPU-side constants model the paper's testbed (RTX 3090 + PCIe 3.0 + NVMe);
+TPU-side constants are the v5e target used by the roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HostHW:
+    """The paper's old-fashioned server (§6.2)."""
+    hbm_bw: float = 936e9          # RTX 3090 HBM bandwidth, B/s
+    pcie_bw: float = 16e9          # HBM<->DRAM (PCIe 3.0 x16 effective)
+    ssd_bw: float = 3.5e9          # DRAM<->SSD (PCIe 3.0 x4 NVMe)
+    flops: float = 35.6e12         # 3090 fp16 with fp32 acc
+    mem_util: float = 0.8          # achievable fraction of peak bandwidth
+    flop_util: float = 0.45        # achievable fraction of peak FLOPs
+    # small-transfer penalty observed in paper Fig. 5: neuron-granular
+    # copies on HBM reach only a fraction of peak
+    hbm_small_copy_bw: float = 30e9
+    # effective fraction of PCIe bandwidth for scattered neuron-sized
+    # (≈13–40 KB) DRAM→HBM transfers (paper Fig. 5's small-copy penalty)
+    pcie_scatter_eff: float = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuHW:
+    """TPU v5e per chip (roofline constants from the brief)."""
+    flops_bf16: float = 197e12     # FLOP/s
+    hbm_bw: float = 819e9          # B/s
+    ici_bw: float = 50e9           # B/s per link
+    hbm_gb: float = 16.0
+    vmem_bytes: int = 128 * 1024 * 1024
+
+
+HOST = HostHW()
+TPU_V5E = TpuHW()

@@ -1,0 +1,110 @@
+"""Dynamic sparse mixed-precision FFN — the in-graph (jit/pjit) form of the
+paper's MP Inference (§5.2), used by the serving path and the dry-run.
+
+Per decode step:
+  1. predictor scores every FFN neuron from the block input,
+  2. the top ``k = active_ratio·f`` neurons form the active set (batch-shared,
+     see DESIGN.md), *sorted by score*,
+  3. the top ``r_fp16·k`` ranks stay FP16(bf16), the next ``r_int8·k`` ranks
+     are taken from the INT8 bank, the rest from the packed INT4 bank,
+  4. gathered mixed-precision neurons run the GLU FFN.
+
+Sharding: the banks are sharded on the *d_model* axis (opposite of a dense
+FFN) so neuron gathers are shard-local; the contraction over d produces one
+all-reduce, identical in shape to a row-parallel dense FFN.
+
+FLOP/byte accounting vs dense:  compute k/f of the dense FFN FLOPs; weight
+bytes touched per step are k·(r16·2 + r8·1 + r4·0.5)·3·d instead of 3·d·f·2.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.predictor import predictor_scores, shared_topk_indices
+from repro.core.quantize import unpack_int4
+from repro.models.common import activation
+
+
+def tier_sizes(f: int, cfg) -> Dict[str, int]:
+    k = max(int(round(f * cfg.m2_active_ratio)), 8)
+    k = min(k, f)
+    k16 = int(round(k * cfg.m2_ratio_fp16))
+    k8 = int(round(k * cfg.m2_ratio_int8))
+    k4 = max(k - k16 - k8, 0)
+    return {"k": k16 + k8 + k4, "fp16": k16, "int8": k8, "int4": k4}
+
+
+def mp_ffn_apply(cfg, banks, pred, x):
+    """x: (B, S, d) — serving activations. banks/pred: one layer's params.
+
+    Returns (y, info) where info carries the active indices (for the cache
+    manager / ATU policy) and per-tier byte counts.
+    """
+    B, S, d = x.shape
+    f = banks["wg_i8_s"].shape[-1]
+    sizes = tier_sizes(f, cfg)
+    k, k16, k8, k4 = sizes["k"], sizes["fp16"], sizes["int8"], sizes["int4"]
+
+    scores = predictor_scores(x, pred["A"], pred["B"])        # (B,S,f)
+    idx = shared_topk_indices(scores, k)                      # (k,) rank-sorted
+    i16, i8, i4 = idx[:k16], idx[k16:k16 + k8], idx[k16 + k8:]
+
+    compute = x.dtype
+
+    # --- gather per tier ------------------------------------------------
+    def gather_cols(w, cols):                                  # (d, f) -> (d, k')
+        return jnp.take(w, cols, axis=1)
+
+    def gather_rows(w, rows):                                  # (f, d) -> (k', d)
+        return jnp.take(w, rows, axis=0)
+
+    wg16 = gather_cols(banks["wg_fp"], i16).astype(compute)
+    wu16 = gather_cols(banks["wu_fp"], i16).astype(compute)
+    wd16 = gather_rows(banks["wd_fp"], i16).astype(compute)
+
+    wg8 = (gather_cols(banks["wg_i8"], i8).astype(compute)
+           * banks["wg_i8_s"][i8].astype(compute))
+    wu8 = (gather_cols(banks["wu_i8"], i8).astype(compute)
+           * banks["wu_i8_s"][i8].astype(compute))
+    wd8 = (gather_rows(banks["wd_i8"], i8).astype(compute)
+           * banks["wd_i8_s"][i8].astype(compute)[:, None])
+
+    # int4: packed along the non-neuron axis -> unpack after gather
+    wg4 = (unpack_int4(gather_cols(banks["wg_i4"], i4), 0).astype(compute)
+           * banks["wg_i4_s"][i4].astype(compute))
+    wu4 = (unpack_int4(gather_cols(banks["wu_i4"], i4), 0).astype(compute)
+           * banks["wu_i4_s"][i4].astype(compute))
+    wd4 = (unpack_int4(gather_rows(banks["wd_i4"], i4), 1).astype(compute)
+           * banks["wd_i4_s"][i4].astype(compute)[:, None])
+
+    wg = jnp.concatenate([wg16, wg8, wg4], axis=1)            # (d, k)
+    wu = jnp.concatenate([wu16, wu8, wu4], axis=1)
+    wd = jnp.concatenate([wd16, wd8, wd4], axis=0)            # (k, d)
+
+    act = activation(cfg.ffn_act)
+    h = act(jnp.einsum("bsd,dk->bsk", x, wg))
+    h = h * jnp.einsum("bsd,dk->bsk", x, wu)
+    y = jnp.einsum("bsk,kd->bsd", h, wd)
+
+    bytes_moved = 3 * d * (k16 * 2 + k8 * 1 + k4 * 0.5)
+    info = {"active_idx": idx, "bytes_weights": bytes_moved,
+            "sizes": sizes}
+    return y, info
+
+
+def mp_ffn_reference(cfg, wg, wu, wd, pred, x):
+    """Oracle: dense FFN masked to the same active set at full precision —
+    used by tests to bound the quantization error of mp_ffn_apply."""
+    f = wg.shape[-1]
+    sizes = tier_sizes(f, cfg)
+    scores = predictor_scores(x, pred["A"], pred["B"])
+    idx = shared_topk_indices(scores, sizes["k"])
+    mask = jnp.zeros((f,), bool).at[idx].set(True)
+    act = activation(cfg.ffn_act)
+    h = act(jnp.einsum("bsd,df->bsf", x, wg))
+    h = h * jnp.einsum("bsd,df->bsf", x, wu)
+    h = jnp.where(mask, h, 0).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, wd)

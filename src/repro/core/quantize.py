@@ -1,0 +1,98 @@
+"""Symmetric INT8 / packed-INT4 weight quantization (per-neuron scales).
+
+A *neuron* (paper §1 fn.3) is a column of the FFN up/gate projections and the
+matching row of the down projection; scales are therefore per-neuron:
+  W_gate/W_up: (d, f), scale over axis 0 -> (f,)
+  W_down:      (f, d), scale over axis 1 -> (f,)
+
+INT4 values are packed two-per-int8 along the *non-neuron* axis so that
+gathering neurons (columns of up/gate, rows of down) never splits a byte.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+INT4_MAX = 7.0
+
+
+def quantize_int8(w, axis: int):
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis,
+                    keepdims=True) / INT8_MAX
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), jnp.squeeze(scale, axis=axis)
+
+
+def dequantize_int8(q, scale, axis: int):
+    return q.astype(jnp.float32) * jnp.expand_dims(scale, axis)
+
+
+def quantize_int4(w, axis: int):
+    """Returns (packed, scale). ``packed`` halves the *other* axis.
+
+    axis is the reduction axis for the scale (the non-neuron axis), which is
+    also the packing axis: axis=0 packs rows (d -> d//2), axis=1 packs
+    columns. The packed nibble layout is little-endian (low nibble = even
+    index).
+    """
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis,
+                    keepdims=True) / INT4_MAX
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -7, 7)
+    q = q.astype(jnp.int8)
+    if axis == 0:
+        assert w.shape[0] % 2 == 0
+        lo, hi = q[0::2], q[1::2]
+    else:
+        assert w.shape[1] % 2 == 0
+        lo, hi = q[:, 0::2], q[:, 1::2]
+    packed = (lo & 0x0F) | (hi << 4)
+    return packed.astype(jnp.int8), jnp.squeeze(scale, axis=axis)
+
+
+def unpack_int4(packed, axis: int):
+    """Inverse of the packing step: int8 (n//2 on axis) -> int4 values (n)."""
+    lo = (packed << 4) >> 4          # sign-extend low nibble
+    hi = packed >> 4                 # arithmetic shift keeps sign
+    stacked = jnp.stack([lo, hi], axis=axis + 1)
+    shape = list(packed.shape)
+    shape[axis] *= 2
+    return stacked.reshape(shape)
+
+
+def dequantize_int4(packed, scale, axis: int):
+    q = unpack_int4(packed, axis)
+    return q.astype(jnp.float32) * jnp.expand_dims(scale, axis)
+
+
+# ---------------------------------------------------------------------------
+# Neuron-bank container: the SSD-resident representation of one FFN layer.
+
+
+def build_neuron_banks(wg, wu, wd):
+    """Quantize a GLU FFN layer into the three M2Cache precision banks.
+
+    Returns a dict of arrays; per-neuron gathers stay byte-aligned at every
+    precision. fp16 banks keep the input dtype (bf16 on TPU).
+    """
+    g8, g8s = quantize_int8(wg, 0)
+    u8, u8s = quantize_int8(wu, 0)
+    d8, d8s = quantize_int8(wd, 1)
+    g4, g4s = quantize_int4(wg, 0)
+    u4, u4s = quantize_int4(wu, 0)
+    d4, d4s = quantize_int4(wd, 1)
+    return {
+        "wg_fp": wg, "wu_fp": wu, "wd_fp": wd,
+        "wg_i8": g8, "wg_i8_s": g8s, "wu_i8": u8, "wu_i8_s": u8s,
+        "wd_i8": d8, "wd_i8_s": d8s,
+        "wg_i4": g4, "wg_i4_s": g4s, "wu_i4": u4, "wu_i4_s": u4s,
+        "wd_i4": d4, "wd_i4_s": d4s,
+    }
+
+
+def bytes_per_neuron(d_model: int, precision: str) -> int:
+    """Traffic cost of loading one neuron (3 vectors of length d_model)."""
+    per_elt = {"fp16": 2.0, "int8": 1.0, "int4": 0.5}[precision]
+    return int(3 * d_model * per_elt)

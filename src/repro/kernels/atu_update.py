@@ -1,0 +1,71 @@
+"""ATU cache-unit update Pallas kernel (paper §5.3, TPU form).
+
+The HBM isolated cache unit is a *compacted* neuron bank ``(d, k)``; the
+Adjacent-Token-Update policy replaces only the neurons that changed between
+tokens. On GPU that is a per-neuron cudaMemcpy storm (paper Fig. 5 shows the
+small-copy penalty); the TPU-native form is one kernel launch that copies
+``m`` changed source columns into ``m`` destination slots, with the
+(src, dst) index pairs scalar-prefetched so each grid step's BlockSpec
+index_map selects the right source column block.
+
+Neuron columns are copied in groups of ``bg`` (default 8) so the VMEM tiles
+stay lane-aligned; the cache manager pads the change-list to a multiple of
+``bg`` with identity copies.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _atu_kernel(src_idx_ref, dst_idx_ref, bank_ref, unit_in_ref,
+                unit_ref, *, bg: int):
+    # bank_ref: (d, bg) gathered source columns (BlockSpec did the gather
+    # via the scalar-prefetched src indices); unit_ref: (d, bg) dst slot view
+    del unit_in_ref  # aliased with the output; untouched blocks persist
+    unit_ref[...] = bank_ref[...].astype(unit_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bg", "interpret"))
+def atu_update(bank, unit, src_idx, dst_idx, *, bg: int = 8,
+               interpret: bool = True):
+    """bank: (d, f) source neuron bank (any precision, already laid out with
+    neurons in columns); unit: (d, k) compacted HBM cache unit;
+    src_idx/dst_idx: (m,) int32, m % bg == 0, *block-group* aligned: entries
+    are neuron ids grouped so src_idx[i*bg:(i+1)*bg] are consecutive slots of
+    a gathered group (the manager builds these). Returns the updated unit.
+
+    Implementation note: TPU gathers are block-granular, so the manager
+    groups changed neurons into ``bg``-wide groups; the index arrays here
+    carry the *group base* per grid step (entries i*bg).
+    """
+    d, f = bank.shape
+    _, k = unit.shape
+    (m,) = src_idx.shape
+    assert m % bg == 0 and m <= k, (m, bg, k)
+    n_groups = m // bg
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_groups,),
+        in_specs=[
+            # gather: block g reads bank[:, src_idx[g*bg]//bg *bg : +bg]
+            pl.BlockSpec(
+                (d, bg), lambda g, src, dst: (0, src[g * bg] // bg)),
+            pl.BlockSpec(
+                (d, bg), lambda g, src, dst: (0, dst[g * bg] // bg)),
+        ],
+        out_specs=pl.BlockSpec(
+            (d, bg), lambda g, src, dst: (0, dst[g * bg] // bg)),
+    )
+    return pl.pallas_call(
+        functools.partial(_atu_kernel, bg=bg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(unit.shape, unit.dtype),
+        input_output_aliases={3: 0},   # unit (after 2 prefetch + bank) -> out
+        interpret=interpret,
+    )(src_idx.astype(jnp.int32), dst_idx.astype(jnp.int32), bank, unit)

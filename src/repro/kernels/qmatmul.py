@@ -1,0 +1,98 @@
+"""Quantized matmul Pallas TPU kernel — the M2Cache compute hot-spot.
+
+Computes ``y[B, N] = x[B, K] @ dequant(w)[K, N]`` where ``w`` is one of the
+three M2Cache precision banks:
+
+  * ``fp``   — bf16/f32 weights as-is,
+  * ``int8`` — sym-quantized, per-output-channel scale (N,),
+  * ``int4`` — packed two-per-int8 along K (K//2 rows), same scale layout.
+
+Tiling: grid (N/bn, K/bk); the K axis is the accumulation ("arbitrary")
+dimension, N is parallel. Per step the kernel holds an (B, bk) x-tile, a
+(bk, bn) weight tile (or (bk//2, bn) packed) and the (B, bn) f32 accumulator
+in VMEM; dequantization happens in-register right before the MXU dot, so
+HBM traffic is the *quantized* bytes — exactly the paper's bandwidth saving,
+mapped to the HBM→VMEM hierarchy (DESIGN.md §2).
+
+MXU alignment: pick bk, bn multiples of 128 (callers use 256×256 by
+default); B stays un-tiled (decode batches are small).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_int4(packed):
+    """(bk//2, bn) int8 -> (bk, bn) int8, little-endian nibbles, row-interleaved."""
+    lo = jnp.int8(packed << 4) >> 4          # sign-extended low nibble
+    hi = packed >> 4
+    half, bn = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(half * 2, bn)
+
+
+def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, *, precision: str,
+                n_k_tiles: int):
+    j = pl.program_id(1)                      # accumulation step over K
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                            # (B, bk)
+    if precision == "int4":
+        w = _unpack_int4(w_ref[...])          # (bk, bn) int8
+        wf = w.astype(jnp.float32)
+    elif precision == "int8":
+        wf = w_ref[...].astype(jnp.float32)   # (bk, bn)
+    else:
+        wf = w_ref[...].astype(jnp.float32)
+    part = jnp.dot(x.astype(jnp.float32), wf,
+                   preferred_element_type=jnp.float32)      # (B, bn)
+    if precision in ("int8", "int4"):
+        part = part * s_ref[...]              # (1, bn) per-channel scale
+    o_ref[...] += part
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("precision", "bk", "bn", "interpret"))
+def qmatmul(x, w, scale=None, *, precision: str = "fp", bk: int = 256,
+            bn: int = 256, interpret: bool = True):
+    """x: (B, K); w: (K, N) [or (K//2, N) int8-packed for int4];
+    scale: (N,) f32 for int8/int4. Returns (B, N) f32."""
+    B, K = x.shape
+    if precision == "int4":
+        K2, N = w.shape
+        assert K2 * 2 == K, (w.shape, x.shape)
+    else:
+        Kw, N = w.shape
+        assert Kw == K
+    bk = min(bk, K)
+    bn = min(bn, N)
+    assert K % bk == 0 and N % bn == 0, (K, N, bk, bn)
+    if scale is None:
+        scale = jnp.ones((N,), jnp.float32)
+    scale2d = scale.reshape(1, N).astype(jnp.float32)
+
+    grid = (N // bn, K // bk)
+    w_block = (bk // 2, bn) if precision == "int4" else (bk, bn)
+
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, precision=precision,
+                          n_k_tiles=K // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, bk), lambda i, j: (0, j)),
+            pl.BlockSpec(w_block, lambda i, j: (j, i)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((B, bn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, scale2d)

@@ -1,0 +1,25 @@
+"""Production mesh construction (single-pod 16×16, multi-pod 2×16×16).
+
+``make_production_mesh`` is a function — importing this module never touches
+jax device state; the dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import so the placeholder devices exist.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1×1 mesh on the single real CPU device (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (1, n), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,199 @@
+"""Step-function + input-spec builders for every (arch × input shape).
+
+``build_case`` returns everything the dry-run/launchers need:
+the jit-able function, abstract input ShapeDtypeStructs (``input_specs``
+pattern — weak-type-correct, no allocation), and in/out shardings.
+
+Decode shapes lower ``serve_step`` (one token against a seq_len KV cache);
+``long_500k`` uses the sliding-window variant (window=8192) for archs whose
+native attention is quadratic (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, get_config
+from repro.models import transformer as T
+from repro.sharding import ShardingPolicy
+from repro.training.optimizer import AdamWConfig, AdamWState, apply_updates
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+@dataclasses.dataclass
+class Case:
+    name: str
+    fn: Any                      # the step callable
+    args: tuple                  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any           # pytree or None
+    donate_argnums: tuple
+    meta: dict
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _window_for(cfg, shape: InputShape) -> int:
+    """Sliding-window override for long-context decode on quadratic archs."""
+    if shape.name == "long_500k" and cfg.num_heads and not cfg.window_size:
+        return LONG_CONTEXT_WINDOW
+    return 0
+
+
+def batch_specs(cfg, shape: InputShape, policy: ShardingPolicy,
+                *, dtype=jnp.bfloat16):
+    """Token/prefix input ShapeDtypeStructs + PartitionSpecs."""
+    B = shape.global_batch
+    n_prefix = 0
+    if cfg.num_prefix_embeddings and shape.kind != "decode":
+        n_prefix = min(cfg.num_prefix_embeddings, shape.seq_len // 4)
+    if shape.kind == "decode":
+        s_tok = 1
+    else:
+        s_tok = shape.seq_len - n_prefix
+    if cfg.family == "audio":
+        tok_shape = (B, cfg.num_codebooks, s_tok)
+        tok_spec = policy.spec(tok_shape, ("pod", "data"), None, None)
+    else:
+        tok_shape = (B, s_tok)
+        tok_spec = policy.spec(tok_shape, ("pod", "data"), None)
+    out = {"tokens": (jax.ShapeDtypeStruct(tok_shape, jnp.int32), tok_spec)}
+    if n_prefix:
+        pshape = (B, n_prefix, cfg.d_model)
+        out["prefix"] = (jax.ShapeDtypeStruct(pshape, dtype),
+                         policy.spec(pshape, ("pod", "data"), None, None))
+    return out
+
+
+def build_case(arch: str, shape_name: str, mesh, *, variant: str = "dense",
+               dtype=jnp.bfloat16, fsdp: bool = True, remat: bool = True,
+               pod_fsdp: bool = False, shard_kv_seq: Optional[bool] = None,
+               expert_data_shard: bool = False, kv_quant: bool = False,
+               tiny: bool = False) -> Case:
+    cfg = get_config(arch, tiny=tiny)
+    shape = INPUT_SHAPES[shape_name]
+    m2 = variant == "m2" and cfg.m2_enabled and shape.kind != "train"
+    if shard_kv_seq is None:
+        shard_kv_seq = shape.kind == "decode"
+    policy = ShardingPolicy(mesh, fsdp=fsdp, pod_fsdp=pod_fsdp,
+                            shard_kv_seq=shard_kv_seq,
+                            expert_data_shard=expert_data_shard)
+    window = _window_for(cfg, shape)
+
+    p_abs = T.abstract_params(cfg, dtype=dtype, m2=m2)
+    p_spec = T.param_shardings(cfg, policy, dtype=dtype, m2=m2)
+    p_shard = _named(mesh, p_spec)
+    bspecs = batch_specs(cfg, shape, policy, dtype=dtype)
+
+    meta = {"arch": arch, "shape": shape_name, "variant": variant,
+            "kind": shape.kind, "window": window, "kv_quant": kv_quant,
+            "chips": int(mesh.devices.size), "m2": m2}
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: T.lm_loss(cfg, p, batch, remat=remat,
+                                    window=window, policy=policy),
+                has_aux=True)(params)
+            params, opt_state, om = apply_updates(params, grads, opt_state,
+                                                  opt_cfg)
+            return params, opt_state, dict(metrics, loss=loss, **om)
+
+        opt_abs = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                          jnp.float32), p_abs),
+            v=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                          jnp.float32), p_abs))
+        opt_shard = AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=jax.tree.map(lambda s: s, p_shard), v=jax.tree.map(
+                lambda s: s, p_shard))
+        batch_abs = {k: v[0] for k, v in bspecs.items()}
+        batch_shard = {k: NamedSharding(mesh, v[1])
+                       for k, v in bspecs.items()}
+        metrics_shard = {k: NamedSharding(mesh, P()) for k in
+                         ("nll", "lb_loss", "loss", "grad_norm", "lr")}
+        return Case(
+            name=f"{arch}|{shape_name}|{variant}", fn=train_step,
+            args=(p_abs, opt_abs, batch_abs),
+            in_shardings=(p_shard, opt_shard, batch_shard),
+            out_shardings=(p_shard, opt_shard, metrics_shard),
+            donate_argnums=(0, 1), meta=meta)
+
+    # ----- serving shapes --------------------------------------------------
+    cache_len = shape.seq_len
+    B = shape.global_batch
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, batch):
+            cache = T.init_cache(cfg, B, max_seq=cache_len, window=window,
+                                 dtype=dtype, kv_quant=kv_quant)
+            logits, cache, _ = T.forward(
+                cfg, params, batch["tokens"], prefix=batch.get("prefix"),
+                cache=cache, mode="prefill", window=window, m2=m2,
+                policy=policy)
+            return logits[..., -1, :], cache
+
+        batch_abs = {k: v[0] for k, v in bspecs.items()}
+        batch_shard = {k: NamedSharding(mesh, v[1])
+                       for k, v in bspecs.items()}
+        cache_shard = _named(mesh, T.cache_shardings(
+            cfg, policy, B, cache_len, window=window, dtype=dtype,
+            kv_quant=kv_quant))
+        logit_shape = ((B, cfg.num_codebooks, cfg.vocab_size)
+                       if cfg.family == "audio" else (B, cfg.vocab_size))
+        logits_shard = NamedSharding(
+            mesh, policy.spec(logit_shape, ("pod", "data")))
+        return Case(
+            name=f"{arch}|{shape_name}|{variant}", fn=prefill_step,
+            args=(p_abs, batch_abs),
+            in_shardings=(p_shard, batch_shard),
+            out_shardings=(logits_shard, cache_shard),
+            donate_argnums=(), meta=meta)
+
+    # decode
+    cache_abs = T.cache_specs(cfg, B, cache_len, window=window, dtype=dtype,
+                              kv_quant=kv_quant)
+    cache_shard = _named(mesh, T.cache_shardings(
+        cfg, policy, B, cache_len, window=window, dtype=dtype,
+        kv_quant=kv_quant))
+
+    def serve_step(params, cache, batch):
+        logits, cache, _ = T.forward(cfg, params, batch["tokens"],
+                                     cache=cache, mode="decode",
+                                     window=window, m2=m2, policy=policy)
+        return logits[..., 0, :], cache
+
+    tok = bspecs["tokens"]
+    batch_abs = {"tokens": tok[0]}
+    batch_shard = {"tokens": NamedSharding(mesh, tok[1])}
+    logit_shape = ((B, cfg.num_codebooks, cfg.vocab_size)
+                   if cfg.family == "audio" else (B, cfg.vocab_size))
+    logits_shard = NamedSharding(
+        mesh, policy.spec(logit_shape, ("pod", "data")))
+    return Case(
+        name=f"{arch}|{shape_name}|{variant}", fn=serve_step,
+        args=(p_abs, cache_abs, batch_abs),
+        in_shardings=(p_shard, cache_shard, batch_shard),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(1,), meta=meta)
+
+
+def input_specs(arch: str, shape_name: str, mesh, **kw) -> tuple:
+    """The brief's ``input_specs()``: ShapeDtypeStruct stand-ins for every
+    model input of this (arch, shape) — no device allocation."""
+    return build_case(arch, shape_name, mesh, **kw).args

@@ -1,0 +1,58 @@
+"""Training launcher.
+
+Host-scale (this container):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --tiny \
+      --steps 100 --batch 8 --seq 128
+
+Production meshes use the same ``build_case`` step the dry-run compiles; on
+real TPU pods this script would be invoked once per host with the same args
+(jax.distributed.initialize handles the rest).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+from repro.training import checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default="")
+    ap.add_argument("--history", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tiny=args.tiny)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 10, 1))
+    params, opt_state, history = train(
+        cfg, steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+        opt_cfg=opt, seed=args.seed)
+    if args.save:
+        checkpoint.save(args.save, params, opt_state,
+                        {"arch": args.arch, "tiny": args.tiny,
+                         "steps": args.steps})
+        print(f"saved checkpoint to {args.save}")
+    if args.history:
+        with open(args.history, "w") as f:
+            json.dump(history, f, indent=1)
+    print(f"final loss: {history[-1]['loss']:.4f} "
+          f"(start {history[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Shared building blocks for the model zoo.
+
+Everything is pure-functional JAX on pytrees of arrays (no flax). Attention
+is implemented flash-style (chunked online softmax over query blocks) so the
+32k/500k input shapes never materialise an S×S score matrix.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def apply_norm(cfg, x, weight):
+    return layer_norm(x, weight) if cfg.norm == "layernorm" else rms_norm(x, weight)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) absolute positions."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # (..., S, 1, 1) * (half,) -> (..., S, 1, half); head axis broadcasts
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "relu": jax.nn.relu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Attention core (works for prefill / train / decode)
+
+
+def _attend(q, k, v, q_pos, kv_pos, *, window: int = 0,
+            softcap: float = 0.0, kv_valid=None):
+    """Dense attention over the given K/V with causal (+window) masking.
+
+    q: (B, Sq, Hq, D)   k, v: (B, Skv, Hkv, D)
+    q_pos: (B, Sq) int32 absolute positions; kv_pos: (B, Skv).
+    kv_valid: optional (B, Skv) bool — entries that contain real data.
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    mask = kv_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+    if window:
+        mask &= kv_pos[:, None, None, None, :] > (
+            q_pos[:, None, None, :, None] - window)
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (window smaller than gap) -> zeros, which is fine
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                      softcap: float = 0.0, kv_valid=None,
+                      q_chunk: int = 512):
+    """Scan over query chunks so peak score memory is (B,H,chunk,Skv)."""
+    B, Sq, Hq, D = q.shape
+    if Sq <= q_chunk:
+        return _attend(q, k, v, q_pos, kv_pos, window=window,
+                       softcap=softcap, kv_valid=kv_valid)
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+    n = Sq // q_chunk
+    qs = q.reshape(B, n, q_chunk, Hq, D).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+
+    def step(_, inp):
+        qc, pc = inp
+        oc = _attend(qc, k, v, pc, kv_pos, window=window,
+                     softcap=softcap, kv_valid=kv_valid)
+        return None, oc
+
+    _, outs = jax.lax.scan(step, None, (qs, ps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# GLU feed-forward (the paper's neuron substrate)
+
+
+def glu_ffn(x, w_gate, w_up, w_down, act_name: str):
+    """y = (act(x W_gate) * (x W_up)) W_down.
+
+    A *neuron* in the paper's sense is the triple
+    (W_gate[:, j], W_up[:, j], W_down[j, :]).
+    """
+    act = activation(act_name)
+    h = act(jnp.einsum("...d,df->...f", x, w_gate))
+    h = h * jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (mamba2 / RG-LRU input branch)
+
+
+def causal_conv1d(x, w, b=None, state=None):
+    """x: (B, S, C); w: (W, C) depthwise; state: (B, W-1, C) past inputs.
+
+    Returns (y, new_state) where new_state holds the last W-1 inputs.
+    """
+    B, S, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xin = jnp.concatenate([state, x], axis=1)          # (B, S+W-1, C)
+    idx = jnp.arange(S)[:, None] + jnp.arange(W)[None, :]
+    windows = xin[:, idx, :]                           # (B, S, W, C)
+    y = jnp.einsum("bswc,wc->bsc", windows, w)         # f32 accumulate
+    if b is not None:
+        y = y + b
+    new_state = xin[:, S:, :] if W > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Parameter init helpers
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,65 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block [arXiv:2402.19427].
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * r_t * softplus(Lambda)),  r_t, i_t gates from the input.
+
+Prefill uses jax.lax.associative_scan (log-depth linear recurrence);
+decode is a single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import causal_conv1d
+
+_C = 8.0  # recurrence-gate temperature from the Griffin paper
+
+
+def rg_lru(x, r, i, lam, h0=None):
+    """x, r, i: (B, S, W) ; lam: (W,). Returns (h_seq, h_final)."""
+    log_a = -_C * r * jax.nn.softplus(lam.astype(jnp.float32))   # (B,S,W) fp32
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if x.shape[1] == 1 and h0 is not None:  # decode fast path
+        h = a[:, 0] * h0.astype(jnp.float32) + b[:, 0]
+        return h[:, None].astype(x.dtype), h.astype(x.dtype)
+
+    if h0 is not None:
+        # fold initial state in as a virtual step: h_0 contributes a-decayed
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    As, Bs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_seq = Bs if h0 is None else Bs[:, 1:]
+    return h_seq.astype(x.dtype), h_seq[:, -1].astype(x.dtype)
+
+
+def rglru_block(cfg, p, x, state, pos, *, mode: str):
+    """Griffin recurrent block. x: (B,S,d).
+
+    state: {'h': (B,W), 'conv': (B,cw-1,W)} or None. Returns (y, new_state).
+    """
+    w = cfg.lru_width
+    y_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_y"]))
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    conv_state = None if state is None else state["conv"]
+    xb, new_conv = causal_conv1d(xb, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xb, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xb, p["w_i"]) + p["b_i"])
+    h0 = None if state is None else state["h"]
+    h_seq, h_fin = rg_lru(xb, r.astype(xb.dtype), i.astype(xb.dtype),
+                          p["lam"], h0)
+
+    out = jnp.einsum("bsw,wd->bsd", y_branch * h_seq, p["w_out"])
+    new_state = ({"h": h_fin, "conv": new_conv}
+                 if state is not None else None)
+    return out, new_state

@@ -1,0 +1,137 @@
+"""Mamba-2 block — SSD (state-space duality) chunked form [arXiv:2405.21060].
+
+Prefill/train use the chunked dual form (quadratic within a chunk, linear
+recurrence across chunk states); decode uses the O(1) recurrent update.
+Attention-free: M2Cache neuron sparsity is inapplicable here (DESIGN.md
+§Arch-applicability) but the layer-wise multi-level weight cache still applies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import causal_conv1d, rms_norm
+
+
+def _segsum(a):
+    """a: (..., L). Returns (..., L, L) with out[i,j] = sum_{k=j+1..i} a_k
+    for i >= j, -inf elsewhere (log-space decay matrix)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, h0=None):
+    """SSD scan. x:(b,s,h,p) dt:(b,s,h) A:(h,) B,C:(b,s,n).
+
+    Returns (y, h_final) with y:(b,s,h,p), h:(b,h,p,n).
+    """
+    b, s, nh, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+
+    xd = x * dt[..., None]                                   # dt-discretised input
+    dtA = dt * A                                             # (b,s,h)
+
+    # chunked views: (b, c, l, ...)
+    cx = xd.reshape(b, c, chunk, nh, p)
+    cB = B.reshape(b, c, chunk, n)
+    cC = C.reshape(b, c, chunk, n)
+    cdtA = dtA.reshape(b, c, chunk, nh)
+
+    A_cum = jnp.cumsum(cdtA, axis=2)                         # inclusive, (b,c,l,h)
+
+    # --- intra-chunk (quadratic, "attention-like") --------------------------
+    Lmat = jnp.exp(_segsum(cdtA.transpose(0, 1, 3, 2)))      # (b,c,h,l,l)
+    Y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp",
+                        cC, cB, Lmat.astype(cC.dtype), cx)
+
+    # --- chunk-final states from intra-chunk inputs --------------------------
+    decay_states = jnp.exp(A_cum[:, :, -1:, :] - A_cum)      # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        cB, decay_states.astype(cB.dtype), cx)
+
+    # --- inter-chunk recurrence over chunk states ----------------------------
+    chunk_decay = jnp.exp(A_cum[:, :, -1, :])                # (b,c,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, n), x.dtype)
+
+    def step(h_prev, inp):
+        st, dec = inp                                        # (b,h,p,n), (b,h)
+        h_new = h_prev * dec[..., None, None].astype(h_prev.dtype) + st
+        return h_new, h_prev                                 # emit state *entering* chunk
+
+    st_sw = states.transpose(1, 0, 2, 3, 4)                  # (c,b,h,p,n)
+    dec_sw = chunk_decay.transpose(1, 0, 2)                  # (c,b,h)
+    h_final, h_prevs = jax.lax.scan(step, h0, (st_sw, dec_sw))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # (b,c,h,p,n)
+
+    # --- inter-chunk contribution --------------------------------------------
+    state_decay = jnp.exp(A_cum)                             # (b,c,l,h)
+    Y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       cC, h_prevs, state_decay.astype(cC.dtype))
+
+    y = (Y_diag + Y_off).reshape(b, s, nh, p)
+    return y, h_final
+
+
+def ssd_decode_step(x, dt, A, B, C, h):
+    """Single-token recurrent update. x:(b,h,p) dt:(b,h) B,C:(b,n) h:(b,h,p,n)."""
+    dec = jnp.exp(dt * A)                                    # (b,h)
+    upd = jnp.einsum("bhp,bn->bhpn", x * dt[..., None], B)
+    h_new = h * dec[..., None, None].astype(h.dtype) + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+
+
+def ssm_block(cfg, p, x, state, pos, *, mode: str):
+    """x: (B, S, d). state: {'h': (B,nh,hd,n), 'conv': (B,W-1,di+2n)} or None.
+
+    Returns (y, new_state).
+    """
+    B_, S, d = x.shape
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (nh,)
+
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bs, Cs = jnp.split(xBC, [di, di + n], axis=-1)
+    xs = xs.reshape(B_, S, nh, hd)
+
+    h0 = None if state is None else state["h"]
+    if mode == "decode":
+        y1, h_new = ssd_decode_step(
+            xs[:, 0], dt[:, 0].astype(xs.dtype), A.astype(xs.dtype),
+            Bs[:, 0], Cs[:, 0],
+            h0 if h0 is not None else jnp.zeros((B_, nh, hd, n), xs.dtype))
+        y = y1[:, None]
+    else:
+        pad = (-S) % cfg.ssm_chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+            Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        y, h_new = ssd_chunked(xs, dt.astype(xs.dtype), A.astype(xs.dtype),
+                               Bs, Cs, chunk=cfg.ssm_chunk, h0=h0)
+        y = y[:, :S]
+
+    y = y + xs[:, :S] * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_state = {"h": h_new, "conv": new_conv} if state is not None else None
+    return out, new_state

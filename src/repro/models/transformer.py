@@ -1,0 +1,773 @@
+"""Model assembly for all six architecture families.
+
+Layers are grouped by the repeating ``block_pattern`` (e.g. RecurrentGemma's
+(rglru, rglru, attn)) and executed with a single ``lax.scan`` over the full
+pattern repeats — HLO size is independent of depth, which keeps the 512-device
+dry-run compile tractable. Remainder layers (num_layers % len(pattern)) run
+inline.
+
+The FFN inside attention/rglru blocks is one of:
+  dense GLU | MoE (sort-free capacity dispatch) | M2Cache mixed-precision
+  sparse (the paper's technique, serving only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mp_ffn as mp
+from repro.core.quantize import build_neuron_banks
+from repro.models import hybrid, moe, ssm
+from repro.models.common import (apply_norm, chunked_attention, dense_init,
+                                 glu_ffn, rope)
+
+# ---------------------------------------------------------------------------
+# Parameter specification
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    dtype: Any
+    kind: str        # sharding kind, dispatched in param_shardings()
+
+
+def _ps(shape, dtype, kind):
+    return ParamSpec(tuple(int(s) for s in shape), dtype, kind)
+
+
+def pattern_of(cfg):
+    if cfg.family == "hybrid":
+        return tuple(cfg.block_pattern)
+    return (cfg.layer_kinds[0],)
+
+
+def pattern_split(cfg) -> Tuple[tuple, int, int]:
+    pat = pattern_of(cfg)
+    F, rem = divmod(cfg.num_layers, len(pat))
+    return pat, F, rem
+
+
+def _ffn_specs(cfg, dtype, m2: bool):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.num_experts:
+        E = cfg.num_experts
+        out = {
+            "router": _ps((d, E), jnp.float32, "replicated"),
+            "wg": _ps((E, d, f), dtype, "expert_in"),
+            "wu": _ps((E, d, f), dtype, "expert_in"),
+            "wd": _ps((E, f, d), dtype, "expert_out"),
+        }
+        if cfg.shared_expert_d_ff:
+            fs = cfg.shared_expert_d_ff
+            out["shared_wg"] = _ps((d, fs), dtype, "col")
+            out["shared_wu"] = _ps((d, fs), dtype, "col")
+            out["shared_wd"] = _ps((fs, d), dtype, "row")
+        if m2:
+            # M2Cache inside active experts: per-expert predictor (DESIGN §5)
+            out["pred_A"] = _ps((d, cfg.m2_predictor_rank), jnp.float32,
+                                "replicated")
+            out["pred_B"] = _ps((cfg.m2_predictor_rank, f), jnp.float32,
+                                "replicated")
+        return out
+    if m2:
+        r = cfg.m2_predictor_rank
+        assert d % 2 == 0 and f % 2 == 0
+        return {
+            "banks": {
+                "wg_fp": _ps((d, f), dtype, "m2_in"),
+                "wu_fp": _ps((d, f), dtype, "m2_in"),
+                "wd_fp": _ps((f, d), dtype, "m2_out"),
+                "wg_i8": _ps((d, f), jnp.int8, "m2_in"),
+                "wu_i8": _ps((d, f), jnp.int8, "m2_in"),
+                "wd_i8": _ps((f, d), jnp.int8, "m2_out"),
+                "wg_i8_s": _ps((f,), jnp.float32, "replicated"),
+                "wu_i8_s": _ps((f,), jnp.float32, "replicated"),
+                "wd_i8_s": _ps((f,), jnp.float32, "replicated"),
+                "wg_i4": _ps((d // 2, f), jnp.int8, "m2_in"),
+                "wu_i4": _ps((d // 2, f), jnp.int8, "m2_in"),
+                "wd_i4": _ps((f, d // 2), jnp.int8, "m2_out"),
+                "wg_i4_s": _ps((f,), jnp.float32, "replicated"),
+                "wu_i4_s": _ps((f,), jnp.float32, "replicated"),
+                "wd_i4_s": _ps((f,), jnp.float32, "replicated"),
+            },
+            "pred": {
+                "A": _ps((d, r), jnp.float32, "replicated"),
+                "B": _ps((r, f), jnp.float32, "pred_out"),
+            },
+        }
+    return {
+        "wg": _ps((d, f), dtype, "col"),
+        "wu": _ps((d, f), dtype, "col"),
+        "wd": _ps((f, d), dtype, "row"),
+    }
+
+
+def _layer_specs(cfg, kind: str, dtype, m2: bool):
+    d = cfg.d_model
+    if kind == "attn":
+        hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        out = {
+            "norm1": _ps((d,), jnp.float32, "vector"),
+            "wqkv": _ps((d, (hq + 2 * hkv) * hd), dtype, "col"),
+            "wo": _ps((hq * hd, d), dtype, "row"),
+            "ffn": _ffn_specs(cfg, dtype, m2),
+        }
+        if cfg.qkv_bias:
+            out["bqkv"] = _ps(((hq + 2 * hkv) * hd,), jnp.float32, "vector")
+        if not cfg.parallel_block:
+            out["norm2"] = _ps((d,), jnp.float32, "vector")
+        return out
+    if kind == "rglru":
+        w = cfg.lru_width
+        return {
+            "norm1": _ps((d,), jnp.float32, "vector"),
+            "w_y": _ps((d, w), dtype, "col"),
+            "w_x": _ps((d, w), dtype, "col"),
+            "conv_w": _ps((cfg.ssm_conv_width, w), jnp.float32, "vector"),
+            "conv_b": _ps((w,), jnp.float32, "vector"),
+            "w_a": _ps((w, w), dtype, "col"),
+            "b_a": _ps((w,), jnp.float32, "vector"),
+            "w_i": _ps((w, w), dtype, "col"),
+            "b_i": _ps((w,), jnp.float32, "vector"),
+            "lam": _ps((w,), jnp.float32, "vector"),
+            "w_out": _ps((w, d), dtype, "row"),
+            "norm2": _ps((d,), jnp.float32, "vector"),
+            "ffn": _ffn_specs(cfg, dtype, m2),
+        }
+    if kind == "ssm":
+        di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+        cw = cfg.ssm_conv_width
+        return {
+            "norm1": _ps((d,), jnp.float32, "vector"),
+            "w_in": _ps((d, 2 * di + 2 * n + nh), dtype, "col"),
+            "dt_bias": _ps((nh,), jnp.float32, "replicated"),
+            "A_log": _ps((nh,), jnp.float32, "replicated"),
+            "D": _ps((nh,), jnp.float32, "replicated"),
+            "conv_w": _ps((cw, di + 2 * n), jnp.float32, "vector"),
+            "conv_b": _ps((di + 2 * n,), jnp.float32, "vector"),
+            "gnorm_w": _ps((di,), jnp.float32, "vector"),
+            "w_out": _ps((di, d), dtype, "row"),
+        }
+    raise ValueError(kind)
+
+
+def _stack(tree, n: int):
+    return jax.tree.map(
+        lambda p: ParamSpec((n,) + p.shape, p.dtype, p.kind), tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def model_param_specs(cfg, *, dtype=jnp.bfloat16, m2: bool = False):
+    """Full parameter pytree spec. ``m2`` swaps dense FFNs for M2Cache banks
+    (serving form of the paper's technique)."""
+    m2 = m2 and cfg.m2_enabled
+    pat, F, rem = pattern_split(cfg)
+    d, V = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, Any] = {
+        "final_norm": _ps((d,), jnp.float32, "vector"),
+        "layers": {
+            "pattern": [_stack(_layer_specs(cfg, k, dtype, m2), F)
+                        for k in pat],
+            "remainder": [_layer_specs(cfg, k, dtype, m2)
+                          for k in pat[:rem]],
+        },
+    }
+    if cfg.family == "audio":
+        specs["embed"] = _ps((cfg.num_codebooks, V, d), dtype, "codebook")
+        specs["unembed"] = _ps((cfg.num_codebooks, d, V), dtype, "codebook_out")
+    else:
+        specs["embed"] = _ps((V, d), dtype, "vocab")
+        if not cfg.tie_embeddings:
+            specs["unembed"] = _ps((V, d), dtype, "vocab")
+    return specs
+
+
+def param_shardings(cfg, policy, *, dtype=jnp.bfloat16, m2: bool = False):
+    """PartitionSpec pytree matching model_param_specs."""
+    from jax.sharding import PartitionSpec as P
+
+    def resolve2(ps: ParamSpec):
+        sh, kind = ps.shape, ps.kind
+        if kind == "col":
+            return policy.col_parallel(sh)
+        if kind == "row":
+            return policy.row_parallel(sh)
+        if kind == "expert_in":
+            # stacked: (F, E, d, f) or unstacked (E, d, f)
+            if len(sh) == 3:
+                return _drop_lead(policy.expert_parallel((1,) + sh))
+            return policy.expert_parallel(sh)
+        if kind == "expert_out":
+            if len(sh) == 3:
+                return _drop_lead(policy.expert_parallel_out((1,) + sh))
+            return policy.expert_parallel_out(sh)
+        if kind == "vector":
+            return policy.vector(sh)
+        if kind == "replicated":
+            return P()
+        if kind == "vocab":
+            return policy.vocab_embed(sh)
+        if kind == "codebook":        # (K, V, d)
+            return policy.spec(sh, None, "model", policy._fsdp_axis())
+        if kind == "codebook_out":    # (K, d, V)
+            return policy.spec(sh, None, policy._fsdp_axis(), "model")
+        if kind == "m2_in":           # (d|d//2, f): shard d on model
+            lead = [None] * (len(sh) - 2)
+            return policy.spec(sh, *lead, "model", None)
+        if kind == "m2_out":          # (f, d|d//2)
+            lead = [None] * (len(sh) - 2)
+            return policy.spec(sh, *lead, None, "model")
+        if kind == "pred_out":        # (r, f)
+            lead = [None] * (len(sh) - 2)
+            return policy.spec(sh, *lead, None, "model")
+        raise ValueError(kind)
+
+    specs = model_param_specs(cfg, dtype=dtype, m2=m2)
+    return jax.tree.map(resolve2, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _drop_lead(p):
+    from jax.sharding import PartitionSpec as P
+    return P(*tuple(p)[1:])
+
+
+def abstract_params(cfg, *, dtype=jnp.bfloat16, m2: bool = False):
+    specs = model_param_specs(cfg, dtype=dtype, m2=m2)
+    return jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
+                        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_params(key, cfg, *, dtype=jnp.bfloat16, m2: bool = False):
+    """Materialise parameters (tiny configs / tests / examples)."""
+    specs = model_param_specs(cfg, dtype=dtype, m2=m2)
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(k, ps: ParamSpec):
+        if ps.kind == "vector" or ps.kind == "replicated":
+            if len(ps.shape) and ps.shape[-1:] and ps.dtype != jnp.int8:
+                # biases/norm-scales start at zero except special params
+                return jnp.zeros(ps.shape, ps.dtype)
+        if ps.dtype == jnp.int8:
+            return jnp.zeros(ps.shape, jnp.int8)
+        return dense_init(k, ps.shape, ps.dtype)
+
+    params = treedef.unflatten(init_one(k, ps) for k, ps in zip(keys, leaves))
+    params = _init_special(cfg, params, m2=m2 and cfg.m2_enabled)
+    return params
+
+
+def _init_special(cfg, params, *, m2: bool):
+    """Non-zero special initialisations + build quantized banks from the
+    freshly-initialised fp weights so all precisions agree."""
+    def fix_layer(p, kind):
+        if kind == "ssm":
+            nh = cfg.ssm_nheads
+            shape = p["A_log"].shape    # possibly (F, nh)
+            p = dict(p)
+            p["A_log"] = jnp.zeros(shape, jnp.float32)      # A = -1
+            p["dt_bias"] = jnp.full(shape, 0.5, jnp.float32)
+            p["D"] = jnp.ones(shape, jnp.float32)
+            cw = dict_conv_init(p["conv_w"])
+            p["conv_w"] = cw
+            return p
+        if kind == "rglru":
+            p = dict(p)
+            # Lambda init so a ~ U(0.9, 0.999) as in Griffin
+            shape = p["lam"].shape
+            p["lam"] = jnp.full(shape, 0.7, jnp.float32)
+            p["conv_w"] = dict_conv_init(p["conv_w"])
+            return p
+        return p
+
+    def dict_conv_init(cw):
+        w = cw.shape[-2] if cw.ndim >= 2 else 1
+        return jnp.full(cw.shape, 1.0 / cw.shape[-2], jnp.float32)
+
+    pat, F, rem = pattern_split(cfg)
+    layers = params["layers"]
+    layers["pattern"] = [fix_layer(p, k) for p, k in zip(layers["pattern"], pat)]
+    layers["remainder"] = [fix_layer(p, k)
+                           for p, k in zip(layers["remainder"], pat[:rem])]
+
+    if m2 and not cfg.num_experts:
+        def rebuild_banks(layer_p, kind):
+            if kind == "ssm" or "ffn" not in layer_p:
+                return layer_p
+            ffn = layer_p["ffn"]
+            if "banks" not in ffn:
+                return layer_p
+            b = ffn["banks"]
+            # rebuild quantized banks from the fp bank (possibly stacked)
+            wg, wu, wd = b["wg_fp"], b["wu_fp"], b["wd_fp"]
+            if wg.ndim == 3:  # stacked (F, d, f)
+                built = jax.vmap(build_neuron_banks)(wg, wu, wd)
+            else:
+                built = build_neuron_banks(wg, wu, wd)
+            ffn = dict(ffn)
+            ffn["banks"] = built
+            out = dict(layer_p)
+            out["ffn"] = ffn
+            return out
+
+        layers["pattern"] = [rebuild_banks(p, k)
+                             for p, k in zip(layers["pattern"], pat)]
+        layers["remainder"] = [rebuild_banks(p, k)
+                               for p, k in zip(layers["remainder"], pat[:rem])]
+    params["layers"] = layers
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches
+
+
+def cache_specs(cfg, batch: int, max_seq: int, *, window: int = 0,
+                dtype=jnp.bfloat16, kv_quant: bool = False):
+    """Abstract decode-cache pytree. ``window`` overrides full attention with
+    a ring buffer (used for long_500k on dense archs). ``kv_quant`` stores
+    K/V as int8 with per-(token, head) scales — a beyond-paper extension of
+    M2Cache's mixed-precision idea to the *KV cache* (halves the dominant
+    decode memory term)."""
+    pat, F, rem = pattern_split(cfg)
+
+    def one(kind):
+        if kind == "attn":
+            w = cfg.window_size or window
+            sbuf = min(w, max_seq) if w else max_seq
+            kv = (batch, sbuf, cfg.num_kv_heads, cfg.head_dim)
+            if kv_quant:
+                sc = (batch, sbuf, cfg.num_kv_heads)
+                return {"k": jax.ShapeDtypeStruct(kv, jnp.int8),
+                        "v": jax.ShapeDtypeStruct(kv, jnp.int8),
+                        "k_s": jax.ShapeDtypeStruct(sc, jnp.float32),
+                        "v_s": jax.ShapeDtypeStruct(sc, jnp.float32)}
+            return {"k": jax.ShapeDtypeStruct(kv, dtype),
+                    "v": jax.ShapeDtypeStruct(kv, dtype)}
+        if kind == "rglru":
+            w = cfg.lru_width
+            return {"h": jax.ShapeDtypeStruct((batch, w), dtype),
+                    "conv": jax.ShapeDtypeStruct(
+                        (batch, cfg.ssm_conv_width - 1, w), dtype)}
+        if kind == "ssm":
+            di, n = cfg.d_inner, cfg.ssm_state
+            return {"h": jax.ShapeDtypeStruct(
+                        (batch, cfg.ssm_nheads, cfg.ssm_head_dim, n), dtype),
+                    "conv": jax.ShapeDtypeStruct(
+                        (batch, cfg.ssm_conv_width - 1, di + 2 * n), dtype)}
+        raise ValueError(kind)
+
+    def stack_sds(tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+    return {
+        "pattern": [stack_sds(one(k), F) for k in pat],
+        "remainder": [one(k) for k in pat[:rem]],
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch: int, max_seq: int, *, window: int = 0,
+               dtype=jnp.bfloat16, kv_quant: bool = False):
+    specs = cache_specs(cfg, batch, max_seq, window=window, dtype=dtype,
+                        kv_quant=kv_quant)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def cache_shardings(cfg, policy, batch: int, max_seq: int, *, window: int = 0,
+                    dtype=jnp.bfloat16, kv_quant: bool = False):
+    from jax.sharding import PartitionSpec as P
+    specs = cache_specs(cfg, batch, max_seq, window=window, dtype=dtype,
+                        kv_quant=kv_quant)
+
+    def resolve(path, s):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "pos":
+            return P()
+        sh = s.shape
+        stacked = getattr(path[0], "key", "") == "pattern"
+        if name in ("k", "v"):
+            if stacked:   # (F, B, S, kvH, Dh)
+                return policy.kv_cache(sh)
+            return _drop_lead(policy.kv_cache((1,) + sh))
+        if name in ("k_s", "v_s"):    # (F, B, S, kvH) scales
+            if stacked:
+                return P(*tuple(policy.kv_cache(sh + (1,)))[:-1])
+            return P(*tuple(policy.kv_cache((1,) + sh + (1,)))[1:-1])
+        # recurrent states
+        if stacked:
+            return policy.recurrent_state(sh)
+        return _drop_lead(policy.recurrent_state((1,) + sh))
+
+    return jax.tree_util.tree_map_with_path(resolve, specs)
+
+
+# ---------------------------------------------------------------------------
+# Layer forward
+
+
+def _ffn_apply(cfg, p_ffn, x, *, m2: bool, policy=None):
+    """Returns (y, aux)."""
+    if cfg.num_experts:
+        shared = None
+        if cfg.shared_expert_d_ff:
+            shared = (p_ffn["shared_wg"], p_ffn["shared_wu"],
+                      p_ffn["shared_wd"])
+        return moe.moe_ffn(
+            x, p_ffn["router"], p_ffn["wg"], p_ffn["wu"], p_ffn["wd"],
+            num_experts_per_tok=cfg.num_experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor,
+            act_name=cfg.ffn_act, shared=shared, policy=policy)
+    if m2 and "banks" in p_ffn:
+        y, info = mp.mp_ffn_apply(cfg, p_ffn["banks"], p_ffn["pred"], x)
+        return y, {"m2_bytes": info["bytes_weights"],
+                   "active_idx": info["active_idx"]}
+    return glu_ffn(x, p_ffn["wg"], p_ffn["wu"], p_ffn["wd"],
+                   cfg.ffn_act), {}
+
+
+def _ring_slot_positions(pos, sbuf):
+    """Absolute position held by each ring slot after writing token ``pos``."""
+    s = jnp.arange(sbuf)
+    return pos - jnp.mod(pos - s, sbuf)
+
+
+def _kv_quantize(x):
+    """(B, S, kvH, Dh) -> (int8 values, (B,S,kvH) f32 scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def _constrain(x, policy, *spec):
+    """Activation sharding constraint (no-op when run without a policy)."""
+    if policy is None:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(policy.mesh, policy.spec(x.shape, *spec)))
+
+
+def attn_layer(cfg, p, x, cache, pos0, *, mode: str, window: int, m2: bool,
+               policy=None):
+    """x: (B,S,d). cache: {'k','v'} or None. pos0: scalar start position."""
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    w_eff = cfg.window_size or window
+
+    h = apply_norm(cfg, x, p["norm1"])
+    qkv = jnp.einsum("bsd,de->bse", h, p["wqkv"])
+    if cfg.qkv_bias:
+        qkv = qkv + p["bqkv"].astype(qkv.dtype)
+    q, k, v = jnp.split(qkv, [hq * hd, (hq + hkv) * hd], axis=-1)
+    q = q.reshape(B, S, hq, hd)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+
+    positions = pos0 + jnp.arange(S)[None, :]              # (1|B, S)
+    positions = jnp.broadcast_to(positions, (B, S))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None or mode != "decode":
+        # Replicate K/V over "model" *before* the q-chunk scan: their fused
+        # kv-head dim (8 heads) cannot shard 16-ways, and leaving the
+        # reshard implicit makes GSPMD re-all-gather K/V inside the scan on
+        # every q-chunk iteration (measured 92 s collective term on
+        # prefill_32k — XLA does not hoist loop-invariant collectives).
+        # One explicit reshard per layer instead of one per chunk.
+        k = _constrain(k, policy, ("pod", "data"), None, None, None)
+        v = _constrain(v, policy, ("pod", "data"), None, None, None)
+    if cache is None:
+        attn_out = chunked_attention(
+            q, k, v, positions, positions, window=w_eff,
+            softcap=cfg.logit_softcap)
+    elif mode == "decode":
+        sbuf = cache["k"].shape[1]
+        pos = pos0                                          # scalar
+        slot = jnp.mod(pos, sbuf) if w_eff else pos
+        # Flash-decoding layout: the KV cache is sharded on its *sequence*
+        # dim over "model" (GQA kv-heads rarely divide the axis). Two rules
+        # keep GSPMD from all-gathering the 100-GiB cache:
+        #   1. the single-token q/k/v must be replicated over "model"
+        #      (they arrive head-sharded from the col-parallel W_qkv, which
+        #      conflicts with the seq-sharded cache on the same mesh axis);
+        #   2. the cache write must be elementwise (one-hot select), not a
+        #      traced-index dynamic_update_slice.
+        # Softmax over the sharded seq dim then partitions into partial
+        # max/sum + tiny all-reduces (the log-sum-exp combine).
+        kv_seq = "model" if (policy is not None and policy.shard_kv_seq) \
+            else None
+        q = _constrain(q, policy, ("pod", "data"), None, None, None)
+        k = _constrain(k, policy, ("pod", "data"), None, None, None)
+        v = _constrain(v, policy, ("pod", "data"), None, None, None)
+        oh = (jnp.arange(sbuf) == slot)[None, :, None, None]
+        kv_quant = "k_s" in cache
+        if kv_quant:
+            kq, ks_new = _kv_quantize(k)
+            vq, vs_new = _kv_quantize(v)
+            ck = jnp.where(oh, kq, cache["k"])
+            cv = jnp.where(oh, vq, cache["v"])
+            cks = jnp.where(oh[..., 0], ks_new, cache["k_s"])
+            cvs = jnp.where(oh[..., 0], vs_new, cache["v_s"])
+        else:
+            ck = jnp.where(oh, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(oh, v.astype(cache["v"].dtype), cache["v"])
+        ck = _constrain(ck, policy, ("pod", "data"), kv_seq, None, None)
+        cv = _constrain(cv, policy, ("pod", "data"), kv_seq, None, None)
+        if w_eff:
+            kv_pos = _ring_slot_positions(pos, sbuf)
+        else:
+            kv_pos = jnp.arange(sbuf)
+        kv_pos_b = jnp.broadcast_to(kv_pos[None], (B, sbuf))
+        valid = (kv_pos >= 0) & (kv_pos <= pos)
+        valid_b = jnp.broadcast_to(valid[None], (B, sbuf))
+        if kv_quant:
+            k_at = _kv_dequantize(ck, cks, x.dtype)
+            v_at = _kv_dequantize(cv, cvs, x.dtype)
+        else:
+            k_at, v_at = ck, cv
+        attn_out = chunked_attention(
+            q, k_at, v_at, positions, kv_pos_b, window=w_eff,
+            softcap=cfg.logit_softcap, kv_valid=valid_b)
+        new_cache = {"k": ck, "v": cv}
+        if kv_quant:
+            new_cache.update({"k_s": cks, "v_s": cvs})
+    else:  # prefill: attend within prompt, then populate the cache
+        attn_out = chunked_attention(
+            q, k, v, positions, positions, window=w_eff,
+            softcap=cfg.logit_softcap)
+        sbuf = cache["k"].shape[1]
+        kv_quant = "k_s" in cache
+        if kv_quant:
+            k_st, ks_st = _kv_quantize(k)
+            v_st, vs_st = _kv_quantize(v)
+        else:
+            k_st, v_st = k.astype(cache["k"].dtype), v.astype(
+                cache["v"].dtype)
+            ks_st = vs_st = None
+        if w_eff and S >= sbuf:
+            slots = jnp.mod(jnp.arange(S - sbuf, S), sbuf)
+            ck = cache["k"].at[:, slots].set(k_st[:, S - sbuf:])
+            cv = cache["v"].at[:, slots].set(v_st[:, S - sbuf:])
+            if kv_quant:
+                cks = cache["k_s"].at[:, slots].set(ks_st[:, S - sbuf:])
+                cvs = cache["v_s"].at[:, slots].set(vs_st[:, S - sbuf:])
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k_st, (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v_st, (0, 0, 0, 0))
+            if kv_quant:
+                cks = jax.lax.dynamic_update_slice(
+                    cache["k_s"], ks_st, (0, 0, 0))
+                cvs = jax.lax.dynamic_update_slice(
+                    cache["v_s"], vs_st, (0, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if kv_quant:
+            new_cache.update({"k_s": cks, "v_s": cvs})
+
+    attn_out = jnp.einsum("bse,ed->bsd",
+                          attn_out.reshape(B, S, hq * hd), p["wo"])
+
+    if cfg.parallel_block:
+        ffn_out, aux = _ffn_apply(cfg, p["ffn"], h, m2=m2, policy=policy)
+        y = x + attn_out + ffn_out
+    else:
+        x = x + attn_out
+        h2 = apply_norm(cfg, x, p["norm2"])
+        ffn_out, aux = _ffn_apply(cfg, p["ffn"], h2, m2=m2, policy=policy)
+        y = x + ffn_out
+    return y, new_cache, aux
+
+
+def rglru_layer(cfg, p, x, cache, pos0, *, mode: str, m2: bool,
+                policy=None):
+    h = apply_norm(cfg, x, p["norm1"])
+    mix, new_state = hybrid.rglru_block(cfg, p, h, cache, pos0, mode=mode)
+    x = x + mix
+    h2 = apply_norm(cfg, x, p["norm2"])
+    ffn_out, aux = _ffn_apply(cfg, p["ffn"], h2, m2=m2, policy=policy)
+    return x + ffn_out, new_state, aux
+
+
+def ssm_layer(cfg, p, x, cache, pos0, *, mode: str):
+    h = apply_norm(cfg, x, p["norm1"])
+    mix, new_state = ssm.ssm_block(cfg, p, h, cache, pos0, mode=mode)
+    return x + mix, new_state, {}
+
+
+def _apply_layer(cfg, kind, p, x, cache, pos0, *, mode, window, m2,
+                 policy=None):
+    if kind == "attn":
+        return attn_layer(cfg, p, x, cache, pos0, mode=mode, window=window,
+                          m2=m2, policy=policy)
+    if kind == "rglru":
+        return rglru_layer(cfg, p, x, cache, pos0, mode=mode, m2=m2,
+                           policy=policy)
+    if kind == "ssm":
+        return ssm_layer(cfg, p, x, cache, pos0, mode=mode)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+
+
+def embed_tokens(cfg, params, tokens):
+    if cfg.family == "audio":
+        # tokens: (B, K, S); sum the K codebook embeddings (MusicGen)
+        def per_cb(k_emb, tok):
+            return jnp.take(k_emb, tok, axis=0)
+        x = jax.vmap(per_cb, in_axes=(0, 1), out_axes=1)(
+            params["embed"], tokens.astype(jnp.int32))      # (B, K, S, d)
+        return x.sum(axis=1)
+    x = jnp.take(params["embed"], tokens.astype(jnp.int32), axis=0)
+    if cfg.family == "hybrid":                               # gemma-style scale
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(cfg, params, x):
+    if cfg.family == "audio":
+        return jnp.einsum("bsd,kdv->bksv", x, params["unembed"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,vd->bsv", x, table)
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+
+
+def forward(cfg, params, tokens, *, prefix=None, cache=None,
+            mode: str = "train", window: int = 0, m2: bool = False,
+            remat: bool = False, policy=None):
+    """Returns (logits, new_cache, aux).
+
+    tokens: (B, S) int32 — audio: (B, K, S). prefix: (B, N, d) precomputed
+    frontend embeddings (vlm patch / audio conditioning), prepended.
+    mode: train | prefill | decode. ``window`` forces sliding-window
+    attention for dense archs (long-context decode).
+    """
+    m2 = m2 and cfg.m2_enabled
+    pat, F, rem = pattern_split(cfg)
+
+    x = embed_tokens(cfg, params, tokens)
+    n_prefix = 0
+    if prefix is not None and mode != "decode":
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+        n_prefix = prefix.shape[1]
+    # Shard activations on the feature dim too: the scan carry (and the
+    # per-layer residuals remat saves for backward) are (B,S,d) — without
+    # this, an 88-layer model stores L×B×S×d unsharded-d residuals/device.
+    x = _constrain(x, policy, ("pod", "data"), None, "model")
+
+    pos0 = cache["pos"] if (cache is not None and mode == "decode") else 0
+
+    def super_block(x, p_list, c_list, pos0):
+        """One pattern repeat: len(pat) layers inline."""
+        new_caches, auxes = [], []
+        for kind, p, c in zip(pat, p_list, c_list):
+            x, nc, aux = _apply_layer(cfg, kind, p, x, c, pos0,
+                                      mode=mode, window=window, m2=m2,
+                                      policy=policy)
+            new_caches.append(nc)
+            auxes.append(aux)
+        lb = sum(a.get("lb_loss", 0.0) for a in auxes)
+        idxs = tuple(a.get("active_idx", jnp.zeros((0,), jnp.int32))
+                     for a in auxes)
+        x = _constrain(x, policy, ("pod", "data"), None, "model")
+        return x, new_caches, lb, idxs
+
+    if remat:
+        super_block = jax.checkpoint(super_block, static_argnums=())
+
+    have_cache = cache is not None
+    p_pat = tuple(params["layers"]["pattern"])
+    c_pat = tuple(cache["pattern"]) if have_cache else tuple(
+        None for _ in pat)
+
+    def scan_step(carry, xs):
+        x, lb_acc = carry
+        if have_cache:
+            p_list, c_list = xs
+        else:
+            p_list, c_list = xs, tuple(None for _ in pat)
+        x, new_caches, lb, idxs = super_block(x, p_list, c_list, pos0)
+        ys = (tuple(new_caches), idxs) if have_cache else (0, idxs)
+        return (x, lb_acc + lb), ys
+
+    xs = (p_pat, c_pat) if have_cache else p_pat
+    (x, lb_acc), (ys_cache, ys_idx) = jax.lax.scan(scan_step, (x, 0.0), xs)
+    new_pattern_cache = list(ys_cache) if have_cache else None
+    active_idx = {"pattern": list(ys_idx), "remainder": []}
+
+    new_rem_cache = []
+    for i, kind in enumerate(pat[:rem]):
+        p = params["layers"]["remainder"][i]
+        c = cache["remainder"][i] if have_cache else None
+        x, nc, aux = _apply_layer(cfg, kind, p, x, c, pos0,
+                                  mode=mode, window=window, m2=m2,
+                                  policy=policy)
+        lb_acc = lb_acc + aux.get("lb_loss", 0.0)
+        active_idx["remainder"].append(
+            aux.get("active_idx", jnp.zeros((0,), jnp.int32)))
+        new_rem_cache.append(nc)
+
+    x = apply_norm(cfg, x, params["final_norm"])
+    if n_prefix and mode != "decode":
+        x = x[:, n_prefix:]
+    logits = unembed(cfg, params, x)
+
+    new_cache = None
+    if have_cache:
+        seq_advance = 1 if mode == "decode" else (
+            tokens.shape[-1] + n_prefix)
+        new_cache = {
+            "pattern": new_pattern_cache,
+            "remainder": new_rem_cache,
+            "pos": (cache["pos"] + seq_advance).astype(jnp.int32),
+        }
+    aux = {"lb_loss": lb_acc, "active_idx": active_idx}
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss
+
+
+def lm_loss(cfg, params, batch, *, remat: bool = True, m2: bool = False,
+            window: int = 0, policy=None):
+    """Next-token cross entropy (+ MoE load-balance auxiliary)."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix")
+    logits, _, aux = forward(cfg, params, tokens, prefix=prefix,
+                             mode="train", remat=remat, m2=m2, window=window,
+                             policy=policy)
+    if cfg.family == "audio":
+        tgt = tokens[..., 1:]                                # (B,K,S-1)
+        lg = logits[..., :-1, :]
+    else:
+        tgt = tokens[:, 1:]
+        lg = logits[:, :-1, :]
+    logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    total = loss + 0.01 * aux.get("lb_loss", 0.0)
+    return total, {"nll": loss, "lb_loss": aux.get("lb_loss", 0.0)}

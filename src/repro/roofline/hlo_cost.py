@@ -1,0 +1,224 @@
+"""Trip-count-aware cost model parsed from optimized HLO text.
+
+``compiled.cost_analysis()`` counts every instruction once, but our layer
+stacks are ``lax.scan`` loops — a 64-layer model's per-layer FLOPs,
+bytes and collectives sit inside a ``while`` body that executes 64 times.
+XLA records ``known_trip_count`` in the while's backend_config, so this
+module rebuilds module-level totals with correct loop weighting:
+
+  * flops        — 2 × |result| × (contracted extent), from ``dot`` ops
+  * bytes        — result + operand bytes of top-level (non-fusion-body)
+                   instructions: a fused region touches HBM only at its
+                   boundary, which is exactly the fusion instruction's
+                   operands/result
+  * collectives  — result bytes per op kind (all-reduce weighted ×2 at the
+                   roofline layer: ring = reduce-scatter + all-gather)
+
+Every quantity is *per device* (the module is the SPMD-partitioned one).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((?:[^()]|\([^)]*\))*\)\s*->", re.M)
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMMENT = re.compile(r"/\*.*?\*/")
+_CALLEE = re.compile(
+    r"(?:body|calls|to_apply|condition|true_computation|false_computation)="
+    r"%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_NO_TRAFFIC = {"parameter", "get-tuple-element", "tuple", "bitcast",
+               "constant", "iota", "after-all", "partition-id",
+               "replica-id", "reshape", "while", "conditional", "call",
+               "custom-call"}
+
+# Ops that index into a large operand: real traffic is the *accessed region*
+# (≈ result / update size), not the whole operand — counting the full KV
+# cache for every per-layer dynamic-slice inflated decode memory terms ~10×.
+_REGION_OPS = {"dynamic-slice", "slice", "gather", "broadcast",
+               "dynamic-update-slice", "scatter"}
+
+
+def _type_numel_bytes(type_str: str) -> Tuple[int, int]:
+    numel = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return numel, nbytes
+
+
+def _dims_of(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_entry: bool
+
+
+def _split_computations(txt: str) -> List[Computation]:
+    comps = []
+    cur = None
+    for line in txt.splitlines():
+        line = _COMMENT.sub("", line)   # /*index=N*/ comments contain '='
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = Computation(hdr.group(2), [], bool(hdr.group(1)))
+            comps.append(cur)
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            type_str = m.group(2)
+            if "=" in type_str:         # attribute leak — not an instruction
+                continue
+            cur.instrs.append(Instr(m.group(1), type_str, m.group(3),
+                                    m.group(4)))
+    return comps
+
+
+def analyze(txt: str) -> Dict:
+    """Returns trip-weighted {'flops','bytes','collectives':{op:{count,bytes}},
+    'unknown_trip_whiles': int} — all per device."""
+    comps = _split_computations(txt)
+    by_name = {c.name: c for c in comps}
+
+    # computations referenced as fusion bodies / reducers: no byte traffic
+    fusion_bodies = set()
+    for c in comps:
+        for ins in c.instrs:
+            if ins.op in ("fusion", "reduce", "reduce-window", "scatter",
+                          "sort", "map", "select-and-scatter"):
+                for callee in _CALLEE.findall(ins.rest):
+                    fusion_bodies.add(callee)
+
+    # ---- call-graph multiplicities ------------------------------------
+    mult: Dict[str, float] = {}
+    unknown_trips = 0
+    entry = next((c for c in comps if c.is_entry), comps[-1] if comps else None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "unknown_trip_whiles": 0}
+    stack = [(entry.name, 1.0)]
+    while stack:
+        name, m = stack.pop()
+        if m <= mult.get(name, 0.0):
+            # keep the max-multiplicity path (a computation reused in two
+            # places is rare post-SPMD; max is the safe upper estimate)
+            continue
+        mult[name] = m
+        comp = by_name.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            trip = 1.0
+            if ins.op == "while":
+                t = _TRIP.search(ins.rest)
+                if t:
+                    trip = float(t.group(1))
+                else:
+                    unknown_trips += 1
+            callees = _CALLEE.findall(ins.rest)
+            b = _BRANCHES.search(ins.rest)
+            if b:
+                callees += [x.strip().lstrip("%")
+                            for x in b.group(1).split(",")]
+            for callee in callees:
+                stack.append((callee, m * trip))
+
+    # ---- weighted totals ------------------------------------------------
+    flops = 0.0
+    bytes_ = 0.0
+    colls: Dict[str, dict] = {}
+    for c in comps:
+        m = mult.get(c.name, 0.0)
+        if m == 0.0:
+            continue
+        defs = {i.name: i.type_str for i in c.instrs}
+        count_bytes = c.name not in fusion_bodies
+        for ins in c.instrs:
+            _, res_bytes = _type_numel_bytes(ins.type_str)
+            if ins.op == "dot":
+                res_numel, _ = _type_numel_bytes(ins.type_str)
+                contr = 1
+                lhs_m = re.match(r"\s*%?([\w.\-]+)", ins.rest)
+                cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+                if lhs_m and cd and lhs_m.group(1) in defs:
+                    dims = _dims_of(defs[lhs_m.group(1)])
+                    for di in cd.group(1).split(","):
+                        if di and int(di) < len(dims):
+                            contr *= dims[int(di)]
+                flops += m * 2.0 * res_numel * contr
+            if ins.op in ("convolution",):
+                # rare here; approximate as result numel × 2 × window size 4
+                res_numel, _ = _type_numel_bytes(ins.type_str)
+                flops += m * 8.0 * res_numel
+            base_op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base_op in COLLECTIVES:
+                b = res_bytes
+                if ins.type_str.startswith("("):
+                    b //= 2        # async tuple holds (operand, result)
+                d = colls.setdefault(base_op, {"count": 0, "bytes": 0.0})
+                d["count"] += 1
+                d["bytes"] += m * b
+            if count_bytes and ins.op not in _NO_TRAFFIC \
+                    and not ins.op.endswith("-done"):
+                if ins.op in _REGION_OPS:
+                    if ins.op in ("dynamic-update-slice", "scatter"):
+                        # traffic ≈ 2 × update region (read-modify-write)
+                        refs = re.findall(r"%([\w.\-]+)", ins.rest)
+                        upd = refs[1] if len(refs) > 1 else None
+                        ub = _type_numel_bytes(defs[upd])[1] \
+                            if upd in defs else 0
+                        bytes_ += m * 2 * ub
+                    else:
+                        bytes_ += m * 2 * res_bytes
+                    continue
+                opnd_bytes = 0
+                for ref in re.findall(r"%([\w.\-]+)", ins.rest)[:8]:
+                    if ref in defs:
+                        _, ob = _type_numel_bytes(defs[ref])
+                        opnd_bytes += ob
+                bytes_ += m * (res_bytes + opnd_bytes)
+
+    return {"flops": flops, "bytes": bytes_, "collectives": colls,
+            "unknown_trip_whiles": unknown_trips}

@@ -1,0 +1,39 @@
+"""Minimal batched request scheduler for the serving examples.
+
+The paper targets small-batch local serving (Deja Vu predictors degrade at
+large batch — §5.5.2), so the scheduler caps batch size and runs FCFS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    output: Optional[list] = None
+    modeled_s: float = 0.0
+
+
+class FCFSScheduler:
+    def __init__(self, max_batch: int = 2):
+        self.max_batch = max_batch
+        self._q: deque = deque()
+
+    def submit(self, req: Request):
+        self._q.append(req)
+
+    def pending(self) -> int:
+        return len(self._q)
+
+    def next_batch(self) -> List[Request]:
+        out = []
+        while self._q and len(out) < self.max_batch:
+            out.append(self._q.popleft())
+        return out

@@ -1,0 +1,168 @@
+"""Divisibility-aware sharding policy.
+
+JAX's jit rejects uneven shardings on arguments, so every PartitionSpec we
+emit is checked against the actual dimension sizes: a mesh axis is silently
+dropped from a dim's spec when it does not divide that dim. This keeps one
+policy valid across all ten assigned architectures (e.g. internvl2's odd
+vocab of 151655, grok's 8 experts on a 16-wide model axis).
+
+Axis conventions (see DESIGN.md §4):
+  "pod"    — pure data parallelism across pods (gradient all-reduce)
+  "data"   — batch parallelism + FSDP weight sharding on the non-parallel dim
+  "model"  — Megatron-style tensor parallelism (column/row parallel weights)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Sizes of the logical axes present in the current mesh (absent -> 1)."""
+    pod: int = 1
+    data: int = 1
+    model: int = 1
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "MeshAxes":
+        d = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return cls(pod=d.get("pod", 1), data=d.get("data", 1),
+                   model=d.get("model", 1))
+
+
+def _axis_size(axes: MeshAxes, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([_axis_size(axes, n) for n in name]))
+    return getattr(axes, name)
+
+
+def checked_pspec(axes: MeshAxes, shape, *spec) -> P:
+    """Build a PartitionSpec, dropping any mesh axis that doesn't divide."""
+    assert len(spec) <= len(shape), (spec, shape)
+    out = []
+    for dim, s in zip(shape, list(spec) + [None] * (len(shape) - len(spec))):
+        if s is None:
+            out.append(None)
+            continue
+        names = s if isinstance(s, (tuple, list)) else (s,)
+        kept = []
+        size_so_far = 1
+        for n in names:
+            a = _axis_size(axes, n)
+            if a > 1 and dim % (size_so_far * a) == 0:
+                kept.append(n)
+                size_so_far *= a
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+class ShardingPolicy:
+    """Computes parameter / activation / cache PartitionSpecs for a config.
+
+    ``fsdp`` controls whether the non-tensor-parallel dim of each weight is
+    additionally sharded over the "data" axis (ZeRO-3 / FSDP style). For
+    training this is on by default; for serving it can be turned off to
+    avoid per-layer all-gathers (§Perf explores this trade-off).
+    """
+
+    def __init__(self, mesh: Mesh, fsdp: bool = True, pod_fsdp: bool = False,
+                 shard_kv_seq: bool = False, expert_data_shard: bool = False):
+        self.mesh = mesh
+        self.axes = MeshAxes.from_mesh(mesh)
+        self.fsdp = fsdp
+        # beyond-paper §Perf knob: extend FSDP over ("data","pod")
+        self.pod_fsdp = pod_fsdp
+        # flash-decoding style KV sequence sharding (used for decode shapes)
+        self.shard_kv_seq = shard_kv_seq
+        # §Perf knob: shard the expert dim over "data" (expert parallelism,
+        # weights stationary; dispatch buffers all-to-all instead of FSDP
+        # weight gathers). Requires E % data == 0 (llama4: 128 % 16).
+        self.expert_data_shard = expert_data_shard
+
+    # -- helpers ---------------------------------------------------------
+    def _fsdp_axis(self):
+        if not self.fsdp:
+            return None
+        return ("data", "pod") if self.pod_fsdp else "data"
+
+    def spec(self, shape, *spec) -> P:
+        return checked_pspec(self.axes, shape, *spec)
+
+    def named(self, shape, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, *spec))
+
+    # -- canonical placements ---------------------------------------------
+    def col_parallel(self, shape) -> P:
+        """(..., d_in, d_out) with d_out tensor-parallel (W_qkv, W_in)."""
+        lead = [None] * (len(shape) - 2)
+        return self.spec(shape, *lead, self._fsdp_axis(), "model")
+
+    def row_parallel(self, shape) -> P:
+        """(..., d_in, d_out) with d_in tensor-parallel (W_o, W_out)."""
+        lead = [None] * (len(shape) - 2)
+        return self.spec(shape, *lead, "model", self._fsdp_axis())
+
+    def expert_parallel(self, shape) -> P:
+        """(L, E, d_in, d_out): experts are tensor-parallel on the hidden
+        dim (uniform across E=8 and E=128 archs — see models/moe.py); the
+        grouped dispatch keeps all data-dependent indexing shard-local.
+        With ``expert_data_shard``, E additionally shards over "data"
+        (stationary weights, a2a on dispatch buffers)."""
+        E = shape[1]
+        if self.expert_data_shard and E % self.axes.data == 0:
+            return self.spec(shape, None, "data", None, "model")
+        return self.spec(shape, None, None, self._fsdp_axis(), "model")
+
+    def expert_parallel_out(self, shape) -> P:
+        E = shape[1]
+        if self.expert_data_shard and E % self.axes.data == 0:
+            return self.spec(shape, None, "data", "model", None)
+        return self.spec(shape, None, None, "model", self._fsdp_axis())
+
+    def vocab_embed(self, shape) -> P:
+        """(V, d): V on "model" when divisible, else d on "model"."""
+        V, d = shape
+        if V % self.axes.model == 0:
+            return self.spec(shape, "model", self._fsdp_axis())
+        return self.spec(shape, self._fsdp_axis(), "model")
+
+    def vector(self, shape) -> P:
+        """1-D per-feature params stacked as (L, dim): shard dim on model."""
+        lead = [None] * (len(shape) - 1)
+        return self.spec(shape, *lead, "model")
+
+    def replicated(self, shape) -> P:
+        return P()
+
+    # -- activations / data ------------------------------------------------
+    def batch(self, shape, batch_dims: int = 1) -> P:
+        """Token/label arrays: batch over ("pod","data")."""
+        return self.spec(shape, ("pod", "data"))
+
+    def activation(self, shape) -> P:
+        """(B, S, D): batch over (pod,data), feature over model."""
+        return self.spec(shape, ("pod", "data"), None, "model")
+
+    def kv_cache(self, shape) -> P:
+        """(L, B, S, kvH, Dh) — batch on (pod,data); seq on model for
+        flash-decoding when requested (GQA kv heads rarely divide 16)."""
+        seq = "model" if self.shard_kv_seq else None
+        return self.spec(shape, None, ("pod", "data"), seq, None, None)
+
+    def recurrent_state(self, shape) -> P:
+        """(L, B, width...) recurrent/SSM states: batch + trailing feature."""
+        lead = [None, ("pod", "data")] + [None] * (len(shape) - 3)
+        return self.spec(shape, *lead, "model")

@@ -1,0 +1,46 @@
+"""Minimal msgpack-free checkpointing: flat .npz of the param/opt pytrees."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[dict, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}, treedef
+
+
+def save(path: str, params, opt_state=None, metadata: dict = None):
+    os.makedirs(path, exist_ok=True)
+    flat, _ = _flatten(params)
+    np.savez(os.path.join(path, "params.npz"), **flat)
+    if opt_state is not None:
+        flat_o, _ = _flatten(opt_state)
+        np.savez(os.path.join(path, "opt_state.npz"), **flat_o)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(metadata or {}, f)
+
+
+def load(path: str, params_template, opt_template=None):
+    """Restore into the given pytree templates (shape/dtype must match)."""
+    def restore(npz_path, template):
+        data = np.load(npz_path)
+        leaves, treedef = jax.tree.flatten(template)
+        new = [jax.numpy.asarray(data[f"leaf_{i}"]).astype(l.dtype)
+               for i, l in enumerate(leaves)]
+        for old, n in zip(leaves, new):
+            assert old.shape == n.shape, (old.shape, n.shape)
+        return treedef.unflatten(new)
+
+    params = restore(os.path.join(path, "params.npz"), params_template)
+    opt_state = None
+    if opt_template is not None and \
+            os.path.exists(os.path.join(path, "opt_state.npz")):
+        opt_state = restore(os.path.join(path, "opt_state.npz"), opt_template)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return params, opt_state, meta

@@ -1,0 +1,57 @@
+"""Training loop: jit'd train_step factory + simple host loop."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.training.optimizer import (AdamWConfig, apply_updates,
+                                      init_opt_state)
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, *, remat: bool = True,
+                    window: int = 0, donate: bool = True):
+    """Returns a jit-able ``train_step(params, opt_state, batch)``."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: T.lm_loss(cfg, p, batch, remat=remat, window=window),
+            has_aux=True)(params)
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg, *, steps: int, batch_size: int, seq_len: int,
+          opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
+          dtype=jnp.float32, log_every: int = 10, remat: bool = True):
+    """Single-host training driver (examples / smoke tests)."""
+    from repro.data.pipeline import batches
+
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    key = jax.random.PRNGKey(seed)
+    params = T.init_params(key, cfg, dtype=dtype)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=remat),
+                      donate_argnums=(0, 1))
+
+    history = []
+    it = batches(cfg, batch_size=batch_size, seq_len=seq_len, seed=seed)
+    t0 = time.time()
+    for i, batch in zip(range(steps), it):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"], m["wall"] = i, time.time() - t0
+            history.append(m)
+            print(f"step {i:5d} loss {m['loss']:.4f} "
+                  f"lr {m['lr']:.2e} gnorm {m['grad_norm']:.2f}")
+    return params, opt_state, history

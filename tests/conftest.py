@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; multi-device sharding checks run in a subprocess (see
+test_sharding.py) so the main process never locks a 512-device backend."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _f64_off():
+    jax.config.update("jax_enable_x64", False)

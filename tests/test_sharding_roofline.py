@@ -1,0 +1,172 @@
+"""Sharding policy properties + HLO cost-model validation + a subprocess
+multi-device lowering check (the main pytest process keeps its 1-device
+backend; the 8-device mesh lives in a child process)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ASSIGNED_ARCHS, get_config
+from repro.sharding import MeshAxes, checked_pspec
+
+
+# ---------------------------------------------------------------------------
+# checked_pspec properties
+
+
+@settings(max_examples=50, deadline=None)
+@given(dim=st.integers(1, 4096), data=st.sampled_from([1, 2, 4, 16]),
+       model=st.sampled_from([1, 4, 16]))
+def test_checked_pspec_only_divisible(dim, data, model):
+    axes = MeshAxes(pod=1, data=data, model=model)
+    spec = checked_pspec(axes, (dim,), "model")
+    if spec[0] == "model":
+        assert dim % model == 0
+    spec2 = checked_pspec(axes, (dim,), ("data", "model"))
+    names = spec2[0]
+    if names is not None:
+        size = np.prod([{"data": data, "model": model}[n]
+                        for n in (names if isinstance(names, tuple)
+                                  else (names,))])
+        assert dim % size == 0
+
+
+def test_fused_head_dims_divisible_for_all_archs():
+    """The sharding design requires (H·Dh) % 16 == 0 for every assigned
+    arch — verified here as a config invariant."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        if cfg.num_heads:
+            assert (cfg.num_heads * cfg.head_dim) % 16 == 0, arch
+            assert (cfg.num_kv_heads * cfg.head_dim) % 16 == 0, arch
+        assert cfg.d_model % 16 == 0, arch
+        if cfg.d_ff:
+            assert cfg.d_ff % 16 == 0, arch
+
+
+def test_exact_assigned_dimensions():
+    """Spec table from the assignment — guard against config drift."""
+    expect = {
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    }
+    for arch, (L, d, H, kv, f, V) in expect.items():
+        cfg = get_config(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads,
+               cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size)
+        assert got == (L, d, H, kv, f, V), (arch, got)
+    assert get_config("grok-1-314b").num_experts == 8
+    assert get_config("grok-1-314b").num_experts_per_tok == 2
+    assert get_config("llama4-maverick-400b-a17b").num_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").num_experts_per_tok == 1
+    assert get_config("mamba2-370m").ssm_state == 128
+
+
+# ---------------------------------------------------------------------------
+# HLO cost model
+
+
+def test_hlo_cost_matches_xla_without_loops(key):
+    from repro.roofline.hlo_cost import analyze
+    x = jax.random.normal(key, (32, 64))
+    w = jax.random.normal(key, (64, 128))
+    compiled = jax.jit(lambda a, b: a @ b).lower(x, w).compile()
+    mine = analyze(compiled.as_text())
+    assert abs(mine["flops"] - 2 * 32 * 64 * 128) / (2 * 32 * 64 * 128) < 0.01
+
+
+def test_hlo_cost_weights_scan_trip_count(key):
+    from repro.roofline.hlo_cost import analyze
+    x = jax.random.normal(key, (32, 64))
+    ws = jax.random.normal(key, (16, 64, 64))
+
+    def f(x, ws):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), 0), x, ws)[0]
+
+    compiled = jax.jit(f).lower(x, ws).compile()
+    mine = analyze(compiled.as_text())
+    expect = 16 * 2 * 32 * 64 * 64
+    assert abs(mine["flops"] - expect) / expect < 0.05
+    assert mine["unknown_trip_whiles"] == 0
+
+
+def test_model_flops_for():
+    from repro.configs.base import INPUT_SHAPES
+    from repro.roofline.analysis import model_flops_for
+    cfg = get_config("qwen2.5-14b")
+    tr = model_flops_for(cfg, INPUT_SHAPES["train_4k"])
+    de = model_flops_for(cfg, INPUT_SHAPES["decode_32k"])
+    n = cfg.param_count()
+    assert abs(tr - 6 * n * 256 * 4096) / tr < 1e-6
+    assert abs(de - 2 * n * 128) / de < 1e-6
+    # MoE uses active params
+    moe = get_config("grok-1-314b")
+    assert moe.active_param_count() < 0.45 * moe.param_count()
+
+
+def test_param_counts_close_to_nameplate():
+    """Total parameter counts should be within ~20% of the model names."""
+    # llama4-maverick: the assigned pool shape (48L × 128 dense-MoE layers,
+    # d_ff 8192/expert + shared) analytically gives ~790B total — the HF
+    # 400B card interleaves dense/MoE layers, a detail the pool spec omits.
+    # We implement the assigned shape exactly, so test the analytic value.
+    expect_b = {"qwen2.5-14b": 14, "qwen2.5-32b": 32, "command-r-35b": 35,
+                "mistral-large-123b": 123, "grok-1-314b": 314,
+                "mamba2-370m": 0.37, "recurrentgemma-2b": 2.7,
+                "llama4-maverick-400b-a17b": 790}
+    for arch, b in expect_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert 0.7 * b < n < 1.35 * b, (arch, n)
+
+
+# ---------------------------------------------------------------------------
+# multi-device lowering (subprocess; tiny configs on a 2×4 mesh)
+
+_CHILD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, jax
+    from repro.launch.steps import build_case
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    results = {}
+    for arch in %s:
+        for shape in ["train_4k", "decode_32k"]:
+            case = build_case(arch, shape, mesh, tiny=True)
+            with mesh:
+                jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                                 out_shardings=case.out_shardings,
+                                 donate_argnums=case.donate_argnums)
+                jitted.lower(*case.args)
+            results[f"{arch}|{shape}"] = "ok"
+    print(json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_multi_device_lowering_subprocess():
+    archs = ["qwen2.5-14b", "grok-1-314b", "recurrentgemma-2b",
+             "mamba2-370m", "musicgen-large"]
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD % repr(archs)],
+        capture_output=True, text=True, env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert all(v == "ok" for v in res.values())

@@ -1,0 +1,117 @@
+"""End-to-end behaviour tests: training reduces loss, the serving engine
+generates with real cache behaviour, ablation/carbon directionality matches
+the paper, checkpoint round-trip, data pipeline contracts."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.engine import M2CacheEngine
+from repro.data.pipeline import SyntheticCorpus, batches
+from repro.models import transformer as T
+from repro.training import checkpoint
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+
+def test_training_reduces_loss(tmp_path):
+    cfg = get_config("qwen2.5-14b", tiny=True)
+    params, opt_state, hist = train(
+        cfg, steps=30, batch_size=4, seq_len=32,
+        opt_cfg=AdamWConfig(lr=3e-3, total_steps=30, warmup_steps=3),
+        log_every=29)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3, hist
+    # checkpoint round-trip
+    ck = str(tmp_path / "ck")
+    checkpoint.save(ck, params, opt_state, {"arch": cfg.name})
+    p2, o2, meta = checkpoint.load(ck, params, opt_state)
+    assert meta["arch"] == cfg.name
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_real_generation_and_cache_stats(tmp_path, key):
+    cfg = get_config("qwen2.5-14b", tiny=True)
+    params = T.init_params(key, cfg, dtype=jnp.float32, m2=True)
+    eng = M2CacheEngine(cfg=cfg, params=params, ssd_dir=str(tmp_path),
+                        dram_capacity_gb=0.5)
+    prompts = np.asarray(jax.random.randint(key, (1, 8), 0, cfg.vocab_size))
+    res = eng.generate(prompts, gen_len=5)
+    assert res.tokens.shape == (1, 5)
+    assert res.tokens_per_s > 0
+    assert 0 < res.cache_stats["hbm_hit_ratio"] <= 1.0
+    assert res.cache_stats["ssd_bytes_read"] > 0
+    assert res.carbon["total_g"] > 0
+    # adjacent-token overlap should make hits common (paper Fig. 6: ~80%)
+    assert res.cache_stats["hbm_hit_ratio"] > 0.3
+
+
+def test_engine_m2_generation_matches_plain_m2_decode(tmp_path, key):
+    """The cache layer must not change the engine's numerics: tokens equal
+    a direct m2-forward greedy decode."""
+    cfg = get_config("qwen2.5-14b", tiny=True)
+    params = T.init_params(key, cfg, dtype=jnp.float32, m2=True)
+    prompts = jnp.asarray(
+        jax.random.randint(key, (1, 8), 0, cfg.vocab_size))
+    eng = M2CacheEngine(cfg=cfg, params=params, ssd_dir=str(tmp_path))
+    res = eng.generate(np.asarray(prompts), gen_len=4)
+
+    cache = T.init_cache(cfg, 1, max_seq=16, dtype=jnp.float32)
+    logits, cache, _ = T.forward(cfg, params, prompts, cache=cache,
+                                 mode="prefill", m2=True)
+    toks = []
+    last = logits[:, -1]
+    for _ in range(4):
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        toks.append(int(nxt[0]))
+        logits, cache, _ = T.forward(cfg, params, nxt[:, None], cache=cache,
+                                     mode="decode", m2=True)
+        last = logits[:, 0]
+    assert list(res.tokens[0]) == toks
+
+
+def test_carbon_model_directionality():
+    from repro.core import carbon
+    e_new = carbon.total_carbon(100.0, device_name="h100",
+                                accelerator_util=0.9, dram_gb=64,
+                                ssd_active=False)
+    e_old = carbon.total_carbon(100.0, device_name="rtx3090",
+                                accelerator_util=0.9, dram_gb=64,
+                                ssd_active=False)
+    assert e_old["total_g"] < e_new["total_g"]       # paper Fig. 1
+    lo = carbon.total_carbon(10.0, device_name="rtx3090",
+                             accelerator_util=0.2, dram_gb=4,
+                             ssd_active=True)
+    hi = carbon.total_carbon(10.0, device_name="rtx3090",
+                             accelerator_util=1.0, dram_gb=64,
+                             ssd_active=True)
+    assert lo["total_g"] < hi["total_g"]             # util & DRAM scale OCE
+    assert lo["ssd_j"] == 10.0 * 2.0                 # paper: SSD 2 W
+
+
+def test_data_pipeline_contracts():
+    for arch in ("qwen2.5-14b", "musicgen-large", "internvl2-1b"):
+        cfg = get_config(arch, tiny=True)
+        b = next(batches(cfg, batch_size=2, seq_len=32, num_batches=1))
+        if cfg.family == "audio":
+            assert b["tokens"].shape[:2] == (2, cfg.num_codebooks)
+            assert b["tokens"].shape[-1] + b["prefix"].shape[1] == 32
+        elif cfg.num_prefix_embeddings:
+            assert b["tokens"].shape[1] + b["prefix"].shape[1] == 32
+        else:
+            assert b["tokens"].shape == (2, 32)
+        assert b["tokens"].max() < cfg.vocab_size
+
+
+def test_synthetic_corpus_has_structure():
+    """Bigram structure => a trained model can beat the unigram entropy;
+    here we just check determinism and the transition bias."""
+    c = SyntheticCorpus(256, seed=1)
+    rng1 = np.random.default_rng(5)
+    rng2 = np.random.default_rng(5)
+    s1, s2 = c.sample(rng1, 200), c.sample(rng2, 200)
+    np.testing.assert_array_equal(s1, s2)
+    hits = sum(int(s1[i + 1] in c.successors[s1[i]])
+               for i in range(len(s1) - 1))
+    assert hits / (len(s1) - 1) > 0.4
