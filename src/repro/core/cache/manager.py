@@ -81,15 +81,20 @@ class MultiLevelCacheManager:
         return flops / (self.hw.flops * self.hw.flop_util)
 
     def process_token(self, active_sets: Sequence[Sequence[int]],
-                      tier_maps: Sequence[Dict[int, str]]) -> TokenReport:
+                      tier_maps: Sequence[Dict[int, str]],
+                      batch_size: int = 1) -> TokenReport:
         """One decode step: per layer, update caches and advance the clock.
 
         active_sets[l] — the predictor's active neuron ids for layer l
-        (rank-sorted); tier_maps[l] — neuron id -> precision tier.
+        (rank-sorted); tier_maps[l] — neuron id -> precision tier. With
+        ``batch_size`` > 1 the step serves one token for each of B batched
+        sequences: compute scales with B while weight traffic (HBM loads,
+        SSD preloads) is paid once — the continuous-batching amortisation.
         """
         t_compute = t_hbm = t_stall = 0.0
         bytes_hbm = 0.0
         ssd_before = self.ssd.bytes_read
+        clock_before = self.clock
         for l in range(self.num_layers):
             now = self.clock
             stall = self.preloader.step(l, now) if self.use_ssd else 0.0
@@ -98,7 +103,8 @@ class MultiLevelCacheManager:
             load_s = s.bytes_loaded \
                 / (self.hw.pcie_bw * self.hw.pcie_scatter_eff) \
                 + s.copies * 5e-6            # per-copy launch latency
-            comp_s = self.compute_time(len(active_sets[l]), tier_maps[l])
+            comp_s = self.compute_time(len(active_sets[l]), tier_maps[l]) \
+                * batch_size
             layer_s = max(comp_s, load_s) + stall
             self.clock += layer_s
             t_compute += comp_s
@@ -108,7 +114,7 @@ class MultiLevelCacheManager:
         total = self.hbm.total
         denom = total.loaded + total.hit
         return TokenReport(
-            modeled_s=t_compute + max(0.0, t_hbm - t_compute) + t_stall,
+            modeled_s=self.clock - clock_before,
             compute_s=t_compute, hbm_load_s=t_hbm, ssd_stall_s=t_stall,
             bytes_hbm=bytes_hbm,
             bytes_ssd=int((self.ssd.bytes_read - ssd_before)
@@ -117,10 +123,12 @@ class MultiLevelCacheManager:
 
 
 def zero_infinity_token_time(*, num_layers: int, layer_bytes_fp16: float,
-                             layer_flops: float, hw: HostHW = HOST) -> float:
-    """Modeled per-token latency of the ZeRO-Inference baseline: every layer's
+                             layer_flops: float, hw: HostHW = HOST,
+                             batch_size: int = 1) -> float:
+    """Modeled per-step latency of the ZeRO-Inference baseline: every layer's
     full FP16 weights stream HBM←DRAM/SSD each step (no sparsity, no reuse —
-    bandwidth-overwhelming by construction)."""
+    bandwidth-overwhelming by construction). ``batch_size`` scales compute
+    only; the weight stream is paid once per step."""
     per_layer_io = layer_bytes_fp16 / hw.pcie_bw
-    per_layer_compute = layer_flops / (hw.flops * hw.flop_util)
+    per_layer_compute = batch_size * layer_flops / (hw.flops * hw.flop_util)
     return num_layers * max(per_layer_io, per_layer_compute)

@@ -38,7 +38,11 @@ class SSDTier:
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key + ".bin")
 
-    def write_layer(self, layer: int, banks: Dict[str, np.ndarray]):
+    def write_layer(self, layer: int, banks: Dict[str, np.ndarray],
+                    flush_meta: bool = True):
+        """``flush_meta=False`` skips the metadata rewrite — for transient
+        tenants (KV block swaps) that never reload across processes, a
+        per-write O(all keys) json dump is pure overhead."""
         for tensor, arr in banks.items():
             key = self._key(layer, tensor)
             arr = np.ascontiguousarray(arr)
@@ -48,6 +52,10 @@ class SSDTier:
             mm.flush()
             self._meta[key] = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
             self.bytes_written += arr.nbytes
+        if flush_meta:
+            self.flush_meta()
+
+    def flush_meta(self):
         with open(self._meta_path, "w") as f:
             json.dump(self._meta, f)
 
@@ -87,6 +95,20 @@ class SSDTier:
         self.bytes_read += arr.nbytes
         self.reads += 1
         return arr
+
+    def delete_layer(self, layer: int, flush_meta: bool = True):
+        """Remove a layer's files, metadata and cached memmaps (KV blocks
+        and other transient tenants must not accumulate on flash)."""
+        for t in self.tensors_of(layer):
+            key = self._key(layer, t)
+            self._maps.pop(key, None)
+            del self._meta[key]
+            try:
+                os.remove(self._path(key))
+            except FileNotFoundError:
+                pass
+        if flush_meta:
+            self.flush_meta()
 
     def reset_stats(self):
         self.bytes_read = self.bytes_written = self.reads = 0

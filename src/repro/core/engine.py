@@ -99,6 +99,31 @@ class OverlapProcess:
         return self.current
 
 
+@dataclasses.dataclass
+class DecodeSession:
+    """Per-request decode state, driven step-by-step by a scheduler.
+
+    Analytic mode carries the request's per-layer overlap processes; real
+    mode carries the jit runner, its KV cache and last-position logits.
+    """
+    rid: int
+    procs: Optional[list] = None        # analytic: per-layer OverlapProcess
+    runner: object = None               # real: RealModelRunner
+    cache: object = None                # real: jax KV cache
+    last: object = None                 # real: last-position logits
+    tokens: list = dataclasses.field(default_factory=list)
+    prefill_report: object = None       # StepReport charged at admission
+
+
+@dataclasses.dataclass
+class StepReport:
+    """One engine step (prefill or batched decode) on the modeled clock."""
+    modeled_s: float
+    compute_s: float
+    batch_size: int
+    report: object = None               # TokenReport when the manager ran
+
+
 class M2CacheEngine:
     def __init__(self, cfg=None, params=None, *, paper_model: str = None,
                  mode: str = "m2cache", hbm_policy: str = "atu",
@@ -136,6 +161,8 @@ class M2CacheEngine:
         self.ssd = SSDTier(self._ssd_dir)
         self._file_byte_scale = 1.0
         self._populate_ssd()
+        self._zi_clock = 0.0             # modeled clock when no manager runs
+        self._runners: Dict[int, object] = {}   # real mode, keyed by max_seq
         self.manager = None
         if mode == "m2cache":
             self.manager = MultiLevelCacheManager(
@@ -214,6 +241,155 @@ class M2CacheEngine:
                 })
 
     # ------------------------------------------------------------------
+    # step-level serving API: a scheduler drives the engine token-by-token
+    # (continuous batching) instead of the closed-loop generate() below.
+
+    @property
+    def clock(self) -> float:
+        """Modeled serving clock (s). All prefill/decode/KV-swap costs
+        accumulate here; request latencies are differences of this clock."""
+        return self.manager.clock if self.manager is not None \
+            else self._zi_clock
+
+    def advance_clock(self, dt: float):
+        """Charge externally-modeled work (e.g. KV swaps) to the clock."""
+        assert dt >= 0.0
+        if self.manager is not None:
+            self.manager.clock += dt
+        else:
+            self._zi_clock += dt
+
+    def kv_bytes_per_token(self) -> float:
+        """FP16 K+V bytes one token pins across all layers."""
+        return 2.0 * self.num_layers * self.d_model * 2.0
+
+    def _runner_for(self, max_seq: int):
+        # bucket to the next power of two (>= 32) so requests with nearby
+        # lengths share one jit'd prefill/decode graph pair
+        max_seq = max(1 << (max_seq - 1).bit_length(), 32)
+        if max_seq not in self._runners:
+            from repro.core.engine_model import RealModelRunner
+            self._runners[max_seq] = RealModelRunner(self.cfg, self.params,
+                                                     max_seq=max_seq)
+        return self._runners[max_seq]
+
+    def _zero_infinity_step(self, batch_size: int) -> StepReport:
+        step = zero_infinity_token_time(
+            num_layers=self.num_layers,
+            layer_bytes_fp16=self._layer_bytes_fp16(),
+            layer_flops=self._layer_flops_dense(), hw=self.hw,
+            batch_size=batch_size)
+        comp = batch_size * self._layer_flops_dense() * self.num_layers \
+            / (self.hw.flops * self.hw.flop_util)
+        self._zi_clock += step
+        return StepReport(modeled_s=step, compute_s=comp,
+                          batch_size=batch_size)
+
+    def _analytic_procs(self, rid: int) -> list:
+        return [OverlapProcess(self.d_ff, self.sizes["k"], self.overlap,
+                               seed=self.seed + 1009 * (rid + 1) + l)
+                for l in range(self.num_layers)]
+
+    @staticmethod
+    def _last_position(arr: np.ndarray) -> np.ndarray:
+        """Prefill active-idx may carry a position axis; charge the last."""
+        arr = np.asarray(arr)
+        if arr.ndim > 1:
+            arr = arr.reshape(-1, arr.shape[-1])[-1]
+        return arr
+
+    def prefill(self, prompt=None, *, rid: int = 0,
+                prompt_len: Optional[int] = None,
+                max_new_tokens: int = 32) -> DecodeSession:
+        """Process one request's prompt; returns its decode session.
+
+        Charges the clock for one pass over all layers with compute scaled
+        by the prompt length while weights stream once (the prefill
+        amortisation). Real-tiny mode runs the actual jit'd prefill; analytic
+        mode samples the request's overlap process (seeded per rid).
+        """
+        if prompt is not None:
+            prompt = np.asarray(prompt)
+            if prompt.ndim == 1:
+                prompt = prompt[None, :]
+            # a padded prompt may carry its true length in prompt_len so
+            # the modeled charge doesn't scale with the padding
+            plen = int(prompt_len or prompt.shape[-1])
+        else:
+            plen = int(prompt_len or 1)
+        if self.mode == "zero_infinity":
+            return DecodeSession(rid=rid,
+                                 prefill_report=self._zero_infinity_step(
+                                     plen))
+        if self.params is not None and prompt is not None:
+            import jax.numpy as jnp
+            # KV must cover the padded prompt even when plen is the true
+            # (shorter) length used for the modeled charge
+            runner = self._runner_for(int(prompt.shape[-1])
+                                      + max_new_tokens + 1)
+            last, cache, aux = runner._prefill(self.params,
+                                               jnp.asarray(prompt))
+            from repro.core.engine_model import flatten_active_idx
+            sets = [self._last_position(a)
+                    for a in flatten_active_idx(self.cfg, aux)]
+            sess = DecodeSession(rid=rid, runner=runner, cache=cache,
+                                 last=last)
+        else:
+            procs = self._analytic_procs(rid) if self.d_ff else None
+            sess = DecodeSession(rid=rid, procs=procs)
+            sets = [pr.step() for pr in procs] if procs else \
+                [np.zeros(0, np.int64)] * self.num_layers
+        tiers = [_tier_map(s, self.sizes) for s in sets]
+        rep = self.manager.process_token(sets, tiers, batch_size=plen)
+        sess.prefill_report = StepReport(modeled_s=rep.modeled_s,
+                                         compute_s=rep.compute_s,
+                                         batch_size=plen, report=rep)
+        return sess
+
+    def decode_step(self, sessions: Sequence[DecodeSession]) -> StepReport:
+        """One decode step for a batch of sessions: every session advances
+        one token; weight traffic is charged once for the union of the
+        batch's active sets while compute scales with the batch size."""
+        B = len(sessions)
+        assert B >= 1
+        if self.mode == "zero_infinity":
+            for sess in sessions:
+                sess.tokens.append(None)
+            return self._zero_infinity_step(B)
+        union: List[dict] = [dict() for _ in range(self.num_layers)]
+        for sess in sessions:
+            # mode is per session: a real engine can still serve analytic
+            # (prompt-less) requests, whose sessions carry procs, not a
+            # runner
+            if sess.runner is not None:
+                import jax.numpy as jnp
+                from repro.core.engine_model import flatten_active_idx
+                nxt = jnp.argmax(sess.last, axis=-1).astype(jnp.int32)
+                sess.tokens.append(int(np.asarray(nxt)[0]))
+                if self.cfg.family == "audio":
+                    tok = jnp.broadcast_to(
+                        nxt[:, None, None],
+                        (nxt.shape[0], self.cfg.num_codebooks, 1))
+                else:
+                    tok = nxt[:, None]
+                sess.last, sess.cache, aux = sess.runner._decode(
+                    self.params, sess.cache, tok)
+                per_layer = [np.asarray(a)
+                             for a in flatten_active_idx(self.cfg, aux)]
+            else:
+                sess.tokens.append(None)
+                per_layer = [pr.step() for pr in sess.procs] \
+                    if sess.procs else []
+            for l, a in enumerate(per_layer):
+                tm = _tier_map(a, self.sizes)
+                for nid in a:
+                    union[l].setdefault(int(nid), tm[int(nid)])
+        sets = [list(d) for d in union]
+        rep = self.manager.process_token(sets, union, batch_size=B)
+        return StepReport(modeled_s=rep.modeled_s, compute_s=rep.compute_s,
+                          batch_size=B, report=rep)
+
+    # ------------------------------------------------------------------
     def generate(self, prompts=None, gen_len: int = 32,
                  prompt_len: int = 64) -> GenerationResult:
         t0 = time.time()
@@ -267,14 +443,10 @@ class M2CacheEngine:
         procs = [OverlapProcess(self.d_ff, self.sizes["k"], self.overlap,
                                 seed=self.seed + l)
                  for l in range(self.num_layers)]
+        sess = DecodeSession(rid=-1, procs=procs)
         reports = []
         for _ in range(gen_len + prime_tokens):
-            sets, tiers = [], []
-            for pr in procs:
-                s = pr.step()
-                sets.append(s)
-                tiers.append(_tier_map(s, self.sizes))
-            reports.append(self.manager.process_token(sets, tiers))
+            reports.append(self.decode_step([sess]).report)
         reports = reports[prime_tokens:]
         modeled = sum(r.modeled_s for r in reports)
         comp = sum(r.compute_s for r in reports)

@@ -1,0 +1,14 @@
+"""Multi-request serving subsystem: continuous batching over the M2Cache
+hierarchy, with per-request KV state paged across HBM→DRAM→SSD."""
+from repro.serving.kv_cache import TieredKVCache
+from repro.serving.request import RequestState, ServingRequest
+from repro.serving.scheduler import (ContinuousBatchScheduler, FCFSScheduler,
+                                     Request, RequestQueue, ServingReport)
+from repro.serving.workload import (ArrivalEvent, closed_trace,
+                                    poisson_trace, requests_from_trace)
+
+__all__ = [
+    "ArrivalEvent", "ContinuousBatchScheduler", "FCFSScheduler", "Request",
+    "RequestQueue", "RequestState", "ServingReport", "ServingRequest",
+    "TieredKVCache", "closed_trace", "poisson_trace", "requests_from_trace",
+]

@@ -1,0 +1,243 @@
+"""Tiered per-request KV cache over the M2Cache hierarchy (HBM→DRAM→SSD).
+
+The paper's three-level weight cache extends naturally to KV state: decode
+reads every resident KV block once per step, so blocks of *running*
+requests want HBM, blocks of preempted/queued requests can wait in DRAM,
+and cold blocks spill to flash. This module implements exactly that:
+
+* a **block table** — fixed-size blocks of ``block_tokens`` tokens per
+  request (paged-attention style), each tracked with its current tier;
+* **LRU eviction** HBM→DRAM through the existing :class:`DRAMCache`
+  (dynamic area, FIFO spill) and DRAM→SSD through the existing
+  :class:`SSDTier` (real file I/O on surrogate payloads, byte-scaled the
+  same way analytic weight banks are);
+* **transfer-clock pricing** — every swap returns modeled seconds
+  (PCIe for HBM⇄DRAM, NVMe for DRAM⇄SSD) that the scheduler charges to
+  the engine clock, so KV paging shows up in ``modeled_s`` and therefore
+  in token rates, latency percentiles and carbon.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import OrderedDict
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+from repro.core.cache.dram_cache import DRAMCache
+from repro.core.cache.ssd_tier import SSDTier
+from repro.core.hw import HOST, HostHW
+
+
+@dataclasses.dataclass
+class KVBlock:
+    bid: int
+    rid: int
+    nbytes: float                 # real (unscaled) bytes
+    tier: str                     # "hbm" | "dram" | "ssd"
+
+
+class TieredKVCache:
+    def __init__(self, *, num_layers: int, d_model: int,
+                 hbm_capacity_bytes: float, dram_capacity_bytes: float,
+                 ssd_dir: str, hw: HostHW = HOST, block_tokens: int = 16,
+                 bytes_per_token: float = None,
+                 max_file_bytes: int = 65536):
+        self.hw = hw
+        self.block_tokens = block_tokens
+        self.bytes_per_token = bytes_per_token if bytes_per_token \
+            else 2.0 * num_layers * d_model * 2.0          # fp16 K+V
+        self.block_bytes = self.block_tokens * self.bytes_per_token
+        # surrogate payloads cap file size; byte_scale maps back to real
+        stored = int(min(self.block_bytes, max_file_bytes))
+        self.byte_scale = self.block_bytes / stored
+        self._stored = stored
+        self.hbm_capacity = float(hbm_capacity_bytes)
+        self.dram = DRAMCache(int(dram_capacity_bytes), n_fixed=0,
+                              byte_scale=self.byte_scale)
+        os.makedirs(ssd_dir, exist_ok=True)
+        self.ssd = SSDTier(ssd_dir)
+
+        self.blocks: Dict[int, KVBlock] = {}
+        self.table: Dict[int, List[int]] = {}      # rid -> block ids
+        self.tokens: Dict[int, int] = {}           # rid -> tokens stored
+        self._hbm_lru: "OrderedDict[int, None]" = OrderedDict()
+        self.hbm_used = 0.0
+        self._next_bid = 0
+        # swap accounting (real bytes / modeled seconds)
+        self.swap_out_bytes = 0.0
+        self.swap_in_bytes = 0.0
+        self.swap_s = 0.0
+        self.preempt_swaps = 0
+
+    # ------------------------------------------------------------------
+    def _payload(self) -> dict:
+        return {"kv": np.zeros(self._stored, np.int8)}
+
+    def _charge(self, dt: float) -> float:
+        self.swap_s += dt
+        return dt
+
+    def blocks_for(self, ntokens: int) -> int:
+        return max((ntokens + self.block_tokens - 1) // self.block_tokens, 1)
+
+    def bytes_of(self, rid: int) -> float:
+        return sum(self.blocks[b].nbytes for b in self.table.get(rid, []))
+
+    # ------------------------------------------------------------------
+    def _spill_dram_to_ssd(self, need_bytes: float) -> float:
+        """FIFO-spill DRAM blocks to flash until ``need_bytes`` fit."""
+        dt = 0.0
+        while self.dram.used_bytes + need_bytes > self.dram.capacity \
+                and self.dram.dynamic:
+            bid = next(iter(self.dram.dynamic))
+            payload = self.dram.dynamic[bid]
+            self.ssd.write_layer(bid, payload, flush_meta=False)
+            self.dram.drop(bid)
+            blk = self.blocks[bid]
+            blk.tier = "ssd"
+            self.swap_out_bytes += blk.nbytes
+            dt += blk.nbytes / self.hw.ssd_bw
+        return dt
+
+    def _demote(self, bid: int) -> float:
+        """HBM → DRAM (spilling DRAM → SSD if the dynamic area is full).
+        Returns raw seconds; callers charge at the public API boundary."""
+        blk = self.blocks[bid]
+        assert blk.tier == "hbm"
+        dt = self._spill_dram_to_ssd(blk.nbytes)
+        self._hbm_lru.pop(bid, None)
+        self.hbm_used -= blk.nbytes
+        self.dram.insert(bid, self._payload())
+        blk.tier = "dram"
+        self.swap_out_bytes += blk.nbytes
+        return dt + blk.nbytes / self.hw.pcie_bw
+
+    def _evict_for(self, need_bytes: float, protect: Iterable[int]) -> float:
+        """LRU-evict non-protected HBM blocks until ``need_bytes`` fit.
+        May leave the cache over budget if everything is protected — the
+        scheduler resolves that by preempting a running request."""
+        protect = set(protect)
+        dt = 0.0
+        while self.hbm_used + need_bytes > self.hbm_capacity:
+            victim = next((b for b in self._hbm_lru
+                           if self.blocks[b].rid not in protect), None)
+            if victim is None:
+                break
+            dt += self._demote(victim)
+        return dt
+
+    def _promote(self, bid: int, protect: Iterable[int]) -> float:
+        """DRAM/SSD → HBM."""
+        blk = self.blocks[bid]
+        dt = self._evict_for(blk.nbytes, protect)
+        if blk.tier == "dram":
+            self.dram.drop(bid)
+            dt += blk.nbytes / self.hw.pcie_bw
+        elif blk.tier == "ssd":
+            self.ssd.read_layer(bid)               # real flash read
+            self.ssd.delete_layer(bid, flush_meta=False)
+            dt += blk.nbytes / self.hw.ssd_bw \
+                + blk.nbytes / self.hw.pcie_bw
+        blk.tier = "hbm"
+        self._hbm_lru[bid] = None
+        self.hbm_used += blk.nbytes
+        self.swap_in_bytes += blk.nbytes
+        return dt
+
+    def _new_block(self, rid: int, protect: Iterable[int]) -> float:
+        dt = self._evict_for(self.block_bytes, protect)
+        bid = self._next_bid
+        self._next_bid += 1
+        self.blocks[bid] = KVBlock(bid=bid, rid=rid,
+                                   nbytes=self.block_bytes, tier="hbm")
+        self.table.setdefault(rid, []).append(bid)
+        self._hbm_lru[bid] = None
+        self.hbm_used += self.block_bytes
+        return dt
+
+    # ------------------------------------------------------------------
+    # scheduler-facing API (all return modeled seconds to charge)
+
+    def alloc(self, rid: int, ntokens: int,
+              protect: Iterable[int] = ()) -> float:
+        """Allocate a fresh request's KV (prompt tokens) in HBM."""
+        assert rid not in self.table
+        self.tokens[rid] = ntokens
+        dt = 0.0
+        for _ in range(self.blocks_for(ntokens)):
+            dt += self._new_block(rid, protect)
+        return self._charge(dt)
+
+    def append_token(self, rid: int, protect: Iterable[int] = ()) -> float:
+        """Grow a running request by one decoded token."""
+        self.tokens[rid] += 1
+        if self.blocks_for(self.tokens[rid]) > len(self.table[rid]):
+            return self._charge(self._new_block(rid, protect))
+        return 0.0
+
+    def touch(self, rid: int):
+        """Mark a request's blocks most-recently-used (decode reads them)."""
+        for bid in self.table.get(rid, []):
+            if bid in self._hbm_lru:
+                self._hbm_lru.move_to_end(bid)
+
+    def ensure_resident(self, rid: int,
+                        protect: Iterable[int] = ()) -> float:
+        """Swap a (possibly preempted) request's blocks back into HBM."""
+        dt = 0.0
+        for bid in self.table.get(rid, []):
+            if self.blocks[bid].tier != "hbm":
+                dt += self._promote(bid, protect)
+        self.touch(rid)
+        return self._charge(dt)
+
+    def swap_out(self, rid: int) -> float:
+        """Preemption: demote all of a request's HBM blocks."""
+        dt = 0.0
+        for bid in self.table.get(rid, []):
+            if self.blocks[bid].tier == "hbm":
+                dt += self._demote(bid)
+        self.preempt_swaps += 1
+        return self._charge(dt)
+
+    def free(self, rid: int):
+        """Release a finished request's blocks from every tier."""
+        for bid in self.table.pop(rid, []):
+            blk = self.blocks.pop(bid)
+            if blk.tier == "hbm":
+                self._hbm_lru.pop(bid, None)
+                self.hbm_used -= blk.nbytes
+            elif blk.tier == "dram":
+                self.dram.drop(bid)
+            elif blk.tier == "ssd":
+                self.ssd.delete_layer(bid, flush_meta=False)
+        self.tokens.pop(rid, None)
+
+    # ------------------------------------------------------------------
+    def over_budget(self) -> bool:
+        return self.hbm_used > self.hbm_capacity
+
+    def can_admit(self, ntokens: int, protect: Iterable[int] = ()) -> bool:
+        """Room for a request's blocks given protected (running) blocks?"""
+        protect = set(protect)
+        protected = sum(self.blocks[b].nbytes for b in self._hbm_lru
+                        if self.blocks[b].rid in protect)
+        need = self.blocks_for(ntokens) * self.block_bytes
+        return protected + need <= self.hbm_capacity
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "kv_hbm_used_bytes": self.hbm_used,
+            "kv_dram_used_bytes": float(self.dram.used_bytes),
+            "kv_ssd_blocks": sum(1 for b in self.blocks.values()
+                                 if b.tier == "ssd"),
+            "kv_blocks": len(self.blocks),
+            "kv_swap_out_bytes": self.swap_out_bytes,
+            "kv_swap_in_bytes": self.swap_in_bytes,
+            "kv_ssd_write_bytes": self.ssd.bytes_written * self.byte_scale,
+            "kv_ssd_read_bytes": self.ssd.bytes_read * self.byte_scale,
+            "kv_swap_s": self.swap_s,
+            "kv_preempt_swaps": self.preempt_swaps,
+        }

@@ -1,0 +1,57 @@
+"""Serving request lifecycle for the continuous-batching scheduler.
+
+A request moves QUEUED → RUNNING → (PREEMPTED → RUNNING)* → FINISHED.
+All timestamps are on the engine's modeled clock (seconds), so latency
+percentiles are comparable with the paper's modeled token rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class ServingRequest:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    prompt: Optional[np.ndarray] = None       # real-tiny mode only
+    state: RequestState = RequestState.QUEUED
+    admitted_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    generated: int = 0
+    preemptions: int = 0
+    session: object = None                    # engine DecodeSession
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.max_new_tokens
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finish_s is None:
+            return None
+        return self.finish_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def total_tokens(self) -> int:
+        """Tokens this request pins in KV: prompt + generated."""
+        return self.prompt_len + self.generated

@@ -1,15 +1,36 @@
-"""Minimal batched request scheduler for the serving examples.
+"""Request scheduling for multi-request serving.
 
-The paper targets small-batch local serving (Deja Vu predictors degrade at
-large batch — §5.5.2), so the scheduler caps batch size and runs FCFS.
+Two schedulers:
+
+* :class:`FCFSScheduler` — the original minimal batch-of-prompts queue,
+  kept for the ``examples/serve_offload.py`` closed-loop driver.
+* :class:`ContinuousBatchScheduler` — the serving subsystem proper: admits
+  trace-driven arrivals, forms a fresh decode batch every step (finished
+  requests leave, queued requests join without waiting for the batch to
+  drain), and preempts LIFO under KV memory pressure, swapping preempted
+  requests' KV through the tiered HBM→DRAM→SSD cache. Every cost — prefill,
+  batched decode, KV swaps — lands on the engine's modeled transfer clock,
+  so throughput/latency/carbon are directly comparable with the paper's
+  single-request numbers.
+
+The paper caps usable batch size (Deja Vu predictors degrade at large
+batch — §5.5.2), so ``max_batch`` defaults stay small.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro.core import carbon as carbon_mod
+from repro.serving.kv_cache import TieredKVCache
+from repro.serving.request import RequestState, ServingRequest
+
+
+# ---------------------------------------------------------------------------
+# legacy minimal scheduler (examples/serve_offload.py)
 
 
 @dataclasses.dataclass
@@ -37,3 +58,215 @@ class FCFSScheduler:
         while self._q and len(out) < self.max_batch:
             out.append(self._q.popleft())
         return out
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+
+
+class RequestQueue:
+    """Admission queue: FIFO over arrivals, but preempted requests re-enter
+    at the front so they resume before new work starts (no starvation)."""
+
+    def __init__(self):
+        self._q: deque = deque()
+
+    def push(self, req: ServingRequest):
+        self._q.append(req)
+
+    def push_front(self, req: ServingRequest):
+        self._q.appendleft(req)
+
+    def pop(self) -> ServingRequest:
+        return self._q.popleft()
+
+    def peek(self) -> ServingRequest:
+        return self._q[0]
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+@dataclasses.dataclass
+class ServingReport:
+    requests: List[ServingRequest]
+    modeled_span_s: float
+    total_tokens: int
+    decode_steps: int
+    preemptions: int
+    kv_stats: Dict[str, float]
+    cache_stats: Dict[str, float]
+    carbon: Dict[str, float]
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / self.modeled_span_s \
+            if self.modeled_span_s else 0.0
+
+    def _pct(self, vals, q) -> float:
+        return float(np.percentile(vals, q)) if vals else 0.0
+
+    @property
+    def latencies(self) -> List[float]:
+        return [r.latency_s for r in self.requests
+                if r.latency_s is not None]
+
+    def summary(self) -> Dict[str, float]:
+        lat = self.latencies
+        ttft = [r.ttft_s for r in self.requests if r.ttft_s is not None]
+        n = max(len(self.requests), 1)
+        return {
+            "requests": len(self.requests),
+            "total_tokens": self.total_tokens,
+            "modeled_span_s": self.modeled_span_s,
+            "tokens_per_s": self.tokens_per_s,
+            "p50_latency_s": self._pct(lat, 50),
+            "p99_latency_s": self._pct(lat, 99),
+            "p50_ttft_s": self._pct(ttft, 50),
+            "p99_ttft_s": self._pct(ttft, 99),
+            "decode_steps": self.decode_steps,
+            "preemptions": self.preemptions,
+            "gco2_per_request": self.carbon["total_g"] / n,
+            "gco2_total": self.carbon["total_g"],
+        }
+
+
+class ContinuousBatchScheduler:
+    """Drives an :class:`M2CacheEngine` step-by-step over an open queue."""
+
+    def __init__(self, engine, kv: Optional[TieredKVCache] = None, *,
+                 max_batch: int = 8, hbm_kv_gb: float = 0.25,
+                 dram_kv_gb: float = 1.0):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.engine = engine
+        if kv is None:
+            import os
+            kv = TieredKVCache(
+                num_layers=engine.num_layers, d_model=engine.d_model,
+                hbm_capacity_bytes=hbm_kv_gb * 2**30,
+                dram_capacity_bytes=dram_kv_gb * 2**30,
+                ssd_dir=os.path.join(engine._ssd_dir, "kv"), hw=engine.hw,
+                bytes_per_token=engine.kv_bytes_per_token())
+        self.kv = kv
+        self.max_batch = max_batch
+        self._t0 = 0.0                   # run()'s clock origin
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: ServingRequest,
+               running: List[ServingRequest]) -> float:
+        """Admit one request; returns its prefill compute seconds."""
+        eng, kv = self.engine, self.kv
+        protect = [r.rid for r in running] + [req.rid]
+        compute_s = 0.0
+        if req.state is RequestState.PREEMPTED:
+            # resume: KV swaps back in; no prefill re-run
+            eng.advance_clock(kv.ensure_resident(req.rid, protect))
+        else:
+            req.session = eng.prefill(
+                req.prompt, rid=req.rid, prompt_len=req.prompt_len,
+                max_new_tokens=req.max_new_tokens)
+            compute_s = req.session.prefill_report.compute_s
+            eng.advance_clock(kv.alloc(req.rid, req.prompt_len, protect))
+            req.admitted_s = eng.clock - self._t0
+        req.state = RequestState.RUNNING
+        running.append(req)
+        return compute_s
+
+    def _preempt(self, running: List[ServingRequest],
+                 queue: RequestQueue) -> int:
+        """LIFO-preempt until the KV working set fits its HBM budget."""
+        n = 0
+        while self.kv.over_budget() and len(running) > 1:
+            victim = running.pop()           # youngest admitted
+            self.engine.advance_clock(self.kv.swap_out(victim.rid))
+            victim.state = RequestState.PREEMPTED
+            victim.preemptions += 1
+            queue.push_front(victim)
+            n += 1
+        return n
+
+    def run(self, requests: List[ServingRequest]) -> ServingReport:
+        eng, kv = self.engine, self.kv
+        pending = sorted(requests, key=lambda r: r.arrival_s)
+        queue = RequestQueue()
+        running: List[ServingRequest] = []
+        finished: List[ServingRequest] = []
+        i = 0
+        clock_start = eng.clock
+        # arrival times are trace-relative; rebase all request timestamps
+        # to this run's clock origin so latency = finish - arrival holds
+        # (the engine clock starts at warmup and accumulates across runs)
+        self._t0 = clock_start
+        compute_s = 0.0
+        decode_steps = 0
+        preemptions = 0
+
+        while i < len(pending) or queue or running:
+            now = eng.clock - clock_start
+            while i < len(pending) and pending[i].arrival_s <= now:
+                queue.push(pending[i])
+                i += 1
+            if not running and not queue:
+                # idle until the next arrival
+                eng.advance_clock(pending[i].arrival_s - now)
+                continue
+            # admit up to max_batch; stop when the KV budget says no
+            while queue and len(running) < self.max_batch:
+                nxt = queue.peek()
+                fits = kv.can_admit(nxt.total_tokens,
+                                    [r.rid for r in running])
+                if not fits and running:
+                    break
+                compute_s += self._admit(queue.pop(), running)
+            preemptions += self._preempt(running, queue)
+            if not running:
+                continue
+            # one continuous-batching decode step
+            rep = eng.decode_step([r.session for r in running])
+            compute_s += rep.compute_s
+            decode_steps += 1
+            for r in running:
+                kv.touch(r.rid)
+                eng.advance_clock(
+                    kv.append_token(r.rid, [x.rid for x in running]))
+                r.generated += 1
+                if r.first_token_s is None:
+                    r.first_token_s = eng.clock - clock_start
+            still = []
+            for r in running:
+                if r.done:
+                    r.state = RequestState.FINISHED
+                    r.finish_s = eng.clock - clock_start
+                    kv.free(r.rid)
+                    finished.append(r)
+                else:
+                    still.append(r)
+            running = still
+
+        span = eng.clock - clock_start
+        total_tokens = sum(r.generated for r in finished)
+        mgr = eng.manager
+        dram_gb = ((mgr.dram.used_bytes if mgr else
+                    eng.num_layers * eng._layer_bytes_fp16())
+                   + kv.dram.used_bytes) / 2**30
+        carbon = carbon_mod.total_carbon(
+            span, device_name=eng.device_name,
+            accelerator_util=min(compute_s / max(span, 1e-12), 1.0),
+            dram_gb=dram_gb, ssd_active=eng.use_ssd)
+        cache_stats = {}
+        if mgr:
+            cache_stats = {
+                "hbm_hit_ratio": mgr.hbm.hit_ratio,
+                "dram_hit_ratio": mgr.dram.hit_ratio,
+                "ssd_bytes_read": int(eng.ssd.bytes_read
+                                      * eng._file_byte_scale),
+            }
+        return ServingReport(
+            requests=finished, modeled_span_s=span,
+            total_tokens=total_tokens, decode_steps=decode_steps,
+            preemptions=preemptions, kv_stats=kv.stats(),
+            cache_stats=cache_stats, carbon=carbon)

@@ -1,0 +1,67 @@
+"""Arrival workloads for the serving subsystem.
+
+``poisson_trace`` draws exponential inter-arrival gaps (the open-loop
+"heavy traffic" model); ``closed_trace`` releases everything at t=0 (the
+offline-batch model). Traces are plain event lists so recorded production
+traces can be replayed through ``requests_from_trace`` unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.request import ServingRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalEvent:
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    max_new_tokens: int
+
+
+def poisson_trace(n: int, rate_rps: float, *, seed: int = 0,
+                  prompt_len: Tuple[int, int] = (16, 64),
+                  gen_len: Tuple[int, int] = (16, 32)) -> List[ArrivalEvent]:
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    events = []
+    for rid in range(n):
+        t += float(rng.exponential(1.0 / rate_rps))
+        events.append(ArrivalEvent(
+            rid=rid, arrival_s=t,
+            prompt_len=int(rng.integers(prompt_len[0], prompt_len[1] + 1)),
+            max_new_tokens=int(rng.integers(gen_len[0], gen_len[1] + 1))))
+    return events
+
+
+def closed_trace(n: int, *, prompt_len: int = 32,
+                 gen_len: int = 32) -> List[ArrivalEvent]:
+    return [ArrivalEvent(rid=i, arrival_s=0.0, prompt_len=prompt_len,
+                         max_new_tokens=gen_len) for i in range(n)]
+
+
+def requests_from_trace(events: Sequence[ArrivalEvent], *,
+                        vocab_size: Optional[int] = None,
+                        seed: int = 0) -> List[ServingRequest]:
+    """Materialise requests; with ``vocab_size`` set, attach real token
+    prompts (left-padded to the trace's max length so the real-tiny engine
+    jits one prefill shape). ``prompt_len`` stays the *true* length so
+    modeled prefill compute, KV footprint and admission checks are not
+    skewed toward the longest prompt in the trace."""
+    rng = np.random.default_rng(seed)
+    pad_to = max((e.prompt_len for e in events), default=0)
+    out = []
+    for e in events:
+        prompt = None
+        if vocab_size is not None:
+            toks = rng.integers(0, vocab_size, e.prompt_len)
+            prompt = np.pad(toks, (pad_to - e.prompt_len, 0)).astype(np.int32)
+        out.append(ServingRequest(
+            rid=e.rid, prompt_len=e.prompt_len,
+            max_new_tokens=e.max_new_tokens,
+            arrival_s=e.arrival_s, prompt=prompt))
+    return out

@@ -1,0 +1,82 @@
+"""Hypothesis import shim.
+
+The tier-1 suite uses hypothesis property tests, but the package is an
+optional dev dependency. When it is missing, a minimal fallback runs each
+property over a small deterministic random sample instead of erroring the
+whole module at collection — the non-property tests must keep running.
+
+The fallback implements only what the suite uses: ``given`` with keyword
+strategies, ``settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``sampled_from`` / ``floats`` strategies plus ``.map``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _FALLBACK_MAX_EXAMPLES = 15
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._sample(rng)))
+
+        def draw(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                n = getattr(run, "_fallback_max_examples",
+                            getattr(fn, "_fallback_max_examples",
+                                    _FALLBACK_MAX_EXAMPLES))
+                rng = random.Random(0)
+                for _ in range(min(n, _FALLBACK_MAX_EXAMPLES)):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # hide the strategy parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            run.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            if hasattr(run, "__wrapped__"):
+                del run.__wrapped__
+            return run
+        return deco

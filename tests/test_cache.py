@@ -5,7 +5,7 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cache.dram_cache import DRAMCache
 from repro.core.cache.hbm_cache import HBMCache, LayerCacheUnit

@@ -1,0 +1,130 @@
+"""Edge cases: OverlapProcess extremes, the ZeRO-Inference baseline path,
+and the modeled_s == clock-delta regression (cache manager accounting)."""
+import numpy as np
+import pytest
+
+from repro.core.cache.manager import (MultiLevelCacheManager,
+                                      zero_infinity_token_time)
+from repro.core.cache.ssd_tier import SSDTier
+from repro.core.engine import M2CacheEngine, OverlapProcess
+from repro.core.hw import HOST
+
+
+# ---------------------------------------------------------------------------
+# OverlapProcess
+
+
+def test_overlap_zero_resamples_everything():
+    pr = OverlapProcess(f=64, k=16, overlap=0.0, seed=3)
+    prev = set(int(i) for i in pr.current)
+    for _ in range(5):
+        cur = set(int(i) for i in pr.step())
+        assert len(cur) == 16
+        # keep = 0: nothing is deliberately retained; with f >> k the fresh
+        # draw excludes nothing, so sets are draws from the full pool
+        assert cur <= set(range(64))
+        prev = cur
+
+
+def test_overlap_one_keeps_the_set_fixed():
+    pr = OverlapProcess(f=64, k=16, overlap=1.0, seed=4)
+    first = set(int(i) for i in pr.current)
+    for _ in range(5):
+        assert set(int(i) for i in pr.step()) == first
+
+
+def test_overlap_k_equals_f_is_always_full():
+    pr = OverlapProcess(f=16, k=16, overlap=0.5, seed=5)
+    for _ in range(4):
+        assert set(int(i) for i in pr.step()) == set(range(16))
+
+
+def test_overlap_fraction_matches_parameter():
+    pr = OverlapProcess(f=4096, k=512, overlap=0.8, seed=0)
+    prev = set(int(i) for i in pr.current)
+    fracs = []
+    for _ in range(20):
+        cur = set(int(i) for i in pr.step())
+        fracs.append(len(cur & prev) / 512)
+        prev = cur
+    # kept fraction >= overlap by construction; fresh draws add a little
+    assert 0.78 < np.mean(fracs) < 0.95
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-Inference baseline path
+
+
+def test_zero_infinity_generate_end_to_end(tmp_path):
+    eng = M2CacheEngine(paper_model="llama-13b", mode="zero_infinity",
+                        ssd_dir=str(tmp_path))
+    res = eng.generate(gen_len=8)
+    per_tok = zero_infinity_token_time(
+        num_layers=eng.num_layers,
+        layer_bytes_fp16=eng._layer_bytes_fp16(),
+        layer_flops=eng._layer_flops_dense(), hw=eng.hw)
+    assert res.modeled_s == pytest.approx(8 * per_tok)
+    assert res.tokens_generated == 8
+    assert res.tokens is None                 # analytic: no real tokens
+    assert res.token_reports == []
+    assert res.carbon["total_g"] > 0
+    assert res.cache_stats == {}              # no manager in this mode
+
+
+def test_zero_infinity_batch_scales_compute_only():
+    one = zero_infinity_token_time(num_layers=4, layer_bytes_fp16=1e6,
+                                   layer_flops=1e8, hw=HOST, batch_size=1)
+    # IO-bound: small batches ride along free
+    assert zero_infinity_token_time(num_layers=4, layer_bytes_fp16=1e6,
+                                    layer_flops=1e8, hw=HOST,
+                                    batch_size=2) == pytest.approx(one)
+    # large enough batch flips the step compute-bound
+    big = zero_infinity_token_time(num_layers=4, layer_bytes_fp16=1e6,
+                                   layer_flops=1e8, hw=HOST,
+                                   batch_size=4096)
+    assert big > one
+
+
+# ---------------------------------------------------------------------------
+# modeled_s regression: per-token reports must sum to the clock delta
+
+
+def _mk_ssd(tmp_path, n_layers=6, nbytes=4000):
+    ssd = SSDTier(str(tmp_path))
+    for l in range(n_layers):
+        ssd.write_layer(l, {"w": np.zeros(nbytes // 4, np.float32)})
+    return ssd
+
+
+def _tiers(ids):
+    return {int(nid): ("fp16", "int8", "int4")[r % 3]
+            for r, nid in enumerate(ids)}
+
+
+def test_modeled_s_equals_clock_delta(tmp_path):
+    ssd = _mk_ssd(tmp_path)
+    mgr = MultiLevelCacheManager(
+        num_layers=6, d_model=64, d_ff=256, active_per_layer=32,
+        ssd=ssd, dram_capacity_bytes=3 * 4000)     # tight: forces stalls
+    clock0 = mgr.clock
+    rng = np.random.default_rng(0)
+    reports = []
+    for _ in range(12):
+        sets = [rng.choice(256, 32, replace=False) for _ in range(6)]
+        reports.append(mgr.process_token(sets, [_tiers(s) for s in sets]))
+    assert sum(r.modeled_s for r in reports) == \
+        pytest.approx(mgr.clock - clock0)
+    # the old recomputation (max over totals) underestimates per-layer maxes
+    for r in reports:
+        assert r.modeled_s >= max(r.compute_s, r.hbm_load_s) \
+            + r.ssd_stall_s - 1e-12
+
+
+def test_engine_generate_modeled_s_matches_clock(tmp_path):
+    eng = M2CacheEngine(paper_model="llama-7b", dram_capacity_gb=6.0,
+                        ssd_dir=str(tmp_path / "w"))
+    # prime tokens are excluded from modeled_s, so measure around generate
+    res = eng.generate(gen_len=6)
+    assert res.modeled_s == pytest.approx(
+        sum(r.modeled_s for r in res.token_reports))
+    assert len(res.token_reports) == 6

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ASSIGNED_ARCHS, get_config
 from repro.sharding import MeshAxes, checked_pspec
