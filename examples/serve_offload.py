@@ -1,8 +1,13 @@
-"""End-to-end serving driver: batched requests through the M2Cache engine
-with a simple FCFS scheduler — the paper's deployment scenario (small-batch
-serving on a memory-constrained box).
+"""End-to-end serving driver: trace-driven requests through the M2Cache
+engine under the continuous-batching scheduler with a pluggable policy —
+the paper's deployment scenario (small-batch serving on a
+memory-constrained box), now with SLO classes and chunked prefill.
 
-  PYTHONPATH=src python examples/serve_offload.py [--requests 6]
+A real tiny model decodes on CPU while every prefill chunk, decode step
+and KV swap is priced on the modeled transfer clock.
+
+  PYTHONPATH=src python examples/serve_offload.py [--requests 6] \
+      [--policy slo] [--prefill-chunk 4]
 """
 import argparse
 import tempfile
@@ -10,12 +15,12 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config
 from repro.core.engine import M2CacheEngine
 from repro.models import transformer as T
-from repro.serving.scheduler import FCFSScheduler, Request
+from repro.serving import (ContinuousBatchScheduler, assign_slo_classes,
+                           make_policy, poisson_trace, requests_from_trace)
 
 
 def main():
@@ -23,6 +28,10 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--gen-len", type=int, default=6)
+    ap.add_argument("--policy", default="slo",
+                    choices=["fcfs", "slo", "carbon"])
+    ap.add_argument("--prefill-chunk", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=2)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=True)
@@ -31,35 +40,34 @@ def main():
     eng = M2CacheEngine(cfg=cfg, params=params,
                         ssd_dir=tempfile.mkdtemp(), dram_capacity_gb=0.5)
 
-    rng = np.random.default_rng(0)
-    sched = FCFSScheduler(max_batch=2)
-    for i in range(args.requests):
-        sched.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, rng.integers(4, 12)),
-            max_new_tokens=args.gen_len))
+    events = poisson_trace(args.requests, rate_rps=2.0, seed=0,
+                           prompt_len=(4, 12),
+                           gen_len=(args.gen_len, args.gen_len))
+    events = assign_slo_classes(
+        events, {"interactive": 0.5, "standard": 0.5}, seed=0)
+    reqs = requests_from_trace(events, vocab_size=cfg.vocab_size, seed=0)
 
+    sched = ContinuousBatchScheduler(eng, max_batch=args.max_batch,
+                                     policy=make_policy(args.policy),
+                                     prefill_chunk=args.prefill_chunk)
     t0 = time.time()
-    done = []
-    while sched.pending():
-        batch = sched.next_batch()
-        # pad prompts to a common length (left-pad with 0)
-        L = max(len(r.prompt) for r in batch)
-        prompts = np.stack([np.pad(r.prompt, (L - len(r.prompt), 0))
-                            for r in batch]).astype(np.int32)
-        res = eng.generate(prompts, gen_len=args.gen_len)
-        for r, toks in zip(batch, res.tokens):
-            r.output = toks.tolist()
-            r.modeled_s = res.modeled_s
-            done.append(r)
+    rep = sched.run(reqs)
     wall = time.time() - t0
 
-    print(f"served {len(done)} requests in {wall:.1f}s wall "
-          f"(CPU tiny-model execution)")
-    for r in done:
-        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
-    total_modeled = sum(r.modeled_s for r in done) / 2  # per batch of 2
-    print(f"modeled serving clock total: {total_modeled * 1e3:.2f} ms")
+    print(f"served {len(rep.requests)} requests in {wall:.1f}s wall "
+          f"(CPU tiny-model execution, policy={rep.policy}, "
+          f"{rep.prefill_chunks} prefill chunks)")
+    for r in sorted(rep.requests, key=lambda r: r.rid):
+        cls = r.slo.name if r.slo else "-"
+        met = {True: "met", False: "MISSED", None: "n/a"}[r.slo_met()]
+        print(f"  req {r.rid} [{cls:11s}] prompt[{r.prompt_len}] "
+              f"ttft={r.ttft_s:6.2f}s lat={r.latency_s:6.2f}s slo={met} "
+              f"-> {r.session.tokens}")
+    s = rep.summary()
+    print(f"modeled span: {rep.modeled_span_s:.2f}s  "
+          f"tok/s={s['tokens_per_s']:.2f}  "
+          f"SLO attainment={s.get('slo_attainment', 0):.0%}  "
+          f"gCO2/req={s['gco2_per_request']:.4f}")
     print(f"HBM hit ratio: {eng.manager.hbm.hit_ratio:.1%}; "
           f"DRAM hit ratio: {eng.manager.dram.hit_ratio:.1%}; "
           f"SSD read: {eng.ssd.bytes_read:,} B")

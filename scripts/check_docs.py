@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Docs-consistency check (run in CI).
+
+Fails (exit 1) when:
+  * a ``src/repro/serving/*.py`` module is not mentioned in
+    ``docs/SERVING.md`` — every serving module must stay documented;
+  * a top-level ``src/repro/*`` package is not mentioned in
+    ``docs/ARCHITECTURE.md`` — the module map must not rot;
+  * README does not link every ``docs/*.md`` page;
+  * a relative ``docs/*.md`` cross-reference points at a missing file.
+
+  PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def fail(msgs):
+    for m in msgs:
+        print(f"check_docs: {m}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    errors = []
+
+    serving_doc = (ROOT / "docs" / "SERVING.md").read_text() \
+        if (ROOT / "docs" / "SERVING.md").exists() else ""
+    if not serving_doc:
+        errors.append("docs/SERVING.md is missing")
+    for mod in sorted((ROOT / "src" / "repro" / "serving").glob("*.py")):
+        if mod.name == "__init__.py":
+            continue
+        if mod.name not in serving_doc:
+            errors.append(f"docs/SERVING.md does not mention {mod.name}")
+
+    arch_doc = (ROOT / "docs" / "ARCHITECTURE.md").read_text() \
+        if (ROOT / "docs" / "ARCHITECTURE.md").exists() else ""
+    if not arch_doc:
+        errors.append("docs/ARCHITECTURE.md is missing")
+    for pkg in sorted((ROOT / "src" / "repro").iterdir()):
+        if pkg.name.startswith("__"):
+            continue
+        name = pkg.name if pkg.is_dir() else pkg.stem
+        if name not in arch_doc:
+            errors.append(f"docs/ARCHITECTURE.md does not mention {name}")
+
+    readme = (ROOT / "README.md").read_text()
+    for page in sorted((ROOT / "docs").glob("*.md")):
+        if f"docs/{page.name}" not in readme:
+            errors.append(f"README.md does not link docs/{page.name}")
+
+    # cross-references between docs pages must resolve
+    for page in sorted((ROOT / "docs").glob("*.md")):
+        for ref in re.findall(r"docs/([A-Z_]+\.md)", page.read_text()):
+            if not (ROOT / "docs" / ref).exists():
+                errors.append(f"{page.name} references missing docs/{ref}")
+
+    if errors:
+        fail(errors)
+    print("check_docs: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -105,6 +105,9 @@ class DecodeSession:
 
     Analytic mode carries the request's per-layer overlap processes; real
     mode carries the jit runner, its KV cache and last-position logits.
+    Chunked prefill (``begin_prefill`` + ``prefill_chunk``) tracks its
+    progress in ``prompt_done``; ``prefill_report`` accumulates the charged
+    modeled/compute seconds across chunks.
     """
     rid: int
     procs: Optional[list] = None        # analytic: per-layer OverlapProcess
@@ -112,7 +115,16 @@ class DecodeSession:
     cache: object = None                # real: jax KV cache
     last: object = None                 # real: last-position logits
     tokens: list = dataclasses.field(default_factory=list)
-    prefill_report: object = None       # StepReport charged at admission
+    prefill_report: object = None       # cumulative StepReport over chunks
+    prompt: object = None               # real: stashed (padded) prompt
+    prompt_len: int = 0                 # true prompt tokens to charge
+    prompt_done: int = 0                # prefill tokens already charged
+    max_new_tokens: int = 0
+    _pos_sets: Optional[list] = None    # real: per-layer (P, k) active idx
+
+    @property
+    def prefill_complete(self) -> bool:
+        return self.prompt_done >= self.prompt_len
 
 
 @dataclasses.dataclass
@@ -241,8 +253,20 @@ class M2CacheEngine:
                 })
 
     # ------------------------------------------------------------------
-    # step-level serving API: a scheduler drives the engine token-by-token
+    # Step-level serving API: a scheduler drives the engine token-by-token
     # (continuous batching) instead of the closed-loop generate() below.
+    #
+    # Units and clock semantics: there is ONE modeled clock per engine
+    # (`clock`, seconds), owned by the cache manager (or `_zi_clock` for
+    # the zero_infinity baseline). `prefill_chunk` and `decode_step`
+    # advance it internally via `manager.process_token`; externally
+    # modeled costs (KV swaps, idle gaps) are charged by the scheduler
+    # through `advance_clock`. Every StepReport carries `modeled_s` (the
+    # clock delta of that step, s) and `compute_s` (the accelerator-busy
+    # share of it, s) — compute_s/modeled_s is the utilisation the carbon
+    # model prices (gCO2 via core/carbon.py). Byte quantities inside
+    # reports are real bytes; on-disk surrogate files are smaller by
+    # `_file_byte_scale`.
 
     @property
     def clock(self) -> float:
@@ -252,7 +276,8 @@ class M2CacheEngine:
             else self._zi_clock
 
     def advance_clock(self, dt: float):
-        """Charge externally-modeled work (e.g. KV swaps) to the clock."""
+        """Charge ``dt`` seconds of externally-modeled work (e.g. KV
+        swaps, idle-until-arrival gaps) to the clock."""
         assert dt >= 0.0
         if self.manager is not None:
             self.manager.clock += dt
@@ -290,66 +315,115 @@ class M2CacheEngine:
                                seed=self.seed + 1009 * (rid + 1) + l)
                 for l in range(self.num_layers)]
 
-    @staticmethod
-    def _last_position(arr: np.ndarray) -> np.ndarray:
-        """Prefill active-idx may carry a position axis; charge the last."""
-        arr = np.asarray(arr)
-        if arr.ndim > 1:
-            arr = arr.reshape(-1, arr.shape[-1])[-1]
-        return arr
+    def begin_prefill(self, prompt=None, *, rid: int = 0,
+                      prompt_len: Optional[int] = None,
+                      max_new_tokens: int = 32) -> DecodeSession:
+        """Open a decode session without charging any clock.
 
-    def prefill(self, prompt=None, *, rid: int = 0,
-                prompt_len: Optional[int] = None,
-                max_new_tokens: int = 32) -> DecodeSession:
-        """Process one request's prompt; returns its decode session.
-
-        Charges the clock for one pass over all layers with compute scaled
-        by the prompt length while weights stream once (the prefill
-        amortisation). Real-tiny mode runs the actual jit'd prefill; analytic
-        mode samples the request's overlap process (seeded per rid).
+        The prompt is processed by subsequent :meth:`prefill_chunk` calls
+        (the scheduler interleaves them with decode steps of other
+        requests). ``prompt_len`` may be shorter than a left-padded
+        ``prompt``'s width; only the true length is charged.
         """
         if prompt is not None:
             prompt = np.asarray(prompt)
             if prompt.ndim == 1:
                 prompt = prompt[None, :]
-            # a padded prompt may carry its true length in prompt_len so
-            # the modeled charge doesn't scale with the padding
             plen = int(prompt_len or prompt.shape[-1])
         else:
             plen = int(prompt_len or 1)
+        sess = DecodeSession(rid=rid, prompt=prompt, prompt_len=plen,
+                             max_new_tokens=max_new_tokens)
         if self.mode == "zero_infinity":
-            return DecodeSession(rid=rid,
-                                 prefill_report=self._zero_infinity_step(
-                                     plen))
-        if self.params is not None and prompt is not None:
-            import jax.numpy as jnp
-            # KV must cover the padded prompt even when plen is the true
-            # (shorter) length used for the modeled charge
-            runner = self._runner_for(int(prompt.shape[-1])
-                                      + max_new_tokens + 1)
-            last, cache, aux = runner._prefill(self.params,
-                                               jnp.asarray(prompt))
-            from repro.core.engine_model import flatten_active_idx
-            sets = [self._last_position(a)
-                    for a in flatten_active_idx(self.cfg, aux)]
-            sess = DecodeSession(rid=rid, runner=runner, cache=cache,
-                                 last=last)
+            return sess
+        if not (self.params is not None and prompt is not None):
+            sess.procs = self._analytic_procs(rid) if self.d_ff else None
+        return sess
+
+    def prefill_chunk(self, sess: DecodeSession,
+                      max_tokens: Optional[int] = None) -> StepReport:
+        """Charge the next ``max_tokens`` prompt tokens of one session.
+
+        Each chunk is one pass over all layers with compute scaled by the
+        chunk length while weights stream once, so concurrent decode
+        batches contend with prefill on the same modeled transfer clock
+        (the chunked-prefill pricing). Real-tiny mode runs the actual
+        jit'd prefill once, at the first chunk, then charges each chunk
+        with the active sets of *its own* prompt positions; analytic mode
+        samples the request's overlap process per chunk. Returns the
+        chunk's :class:`StepReport`; ``sess.prefill_report`` accumulates
+        modeled/compute seconds across chunks.
+        """
+        remaining = sess.prompt_len - sess.prompt_done
+        assert remaining > 0, "prefill already complete"
+        n = remaining if max_tokens is None else min(max_tokens, remaining)
+        assert n >= 1
+        if self.mode == "zero_infinity":
+            rep = self._zero_infinity_step(n)
         else:
-            procs = self._analytic_procs(rid) if self.d_ff else None
-            sess = DecodeSession(rid=rid, procs=procs)
-            sets = [pr.step() for pr in procs] if procs else \
-                [np.zeros(0, np.int64)] * self.num_layers
-        tiers = [_tier_map(s, self.sizes) for s in sets]
-        rep = self.manager.process_token(sets, tiers, batch_size=plen)
-        sess.prefill_report = StepReport(modeled_s=rep.modeled_s,
-                                         compute_s=rep.compute_s,
-                                         batch_size=plen, report=rep)
+            if self.params is not None and sess.prompt is not None:
+                sets = self._real_chunk_sets(sess, n)
+            else:
+                sets = [pr.step() for pr in sess.procs] if sess.procs else \
+                    [np.zeros(0, np.int64)] * self.num_layers
+            tiers = [_tier_map(s, self.sizes) for s in sets]
+            tok = self.manager.process_token(sets, tiers, batch_size=n)
+            rep = StepReport(modeled_s=tok.modeled_s,
+                             compute_s=tok.compute_s, batch_size=n,
+                             report=tok)
+        sess.prompt_done += n
+        prev = sess.prefill_report
+        sess.prefill_report = StepReport(
+            modeled_s=rep.modeled_s + (prev.modeled_s if prev else 0.0),
+            compute_s=rep.compute_s + (prev.compute_s if prev else 0.0),
+            batch_size=sess.prompt_done,
+            report=getattr(rep, "report", None))
+        return rep
+
+    def _real_chunk_sets(self, sess: DecodeSession, n: int) -> list:
+        """Active sets for the chunk covering true prompt positions
+        ``[prompt_done, prompt_done + n)``: the jit'd prefill runs once at
+        the first chunk (numerics are position-independent of chunking);
+        each chunk is charged with its last position's predictor output."""
+        if sess.runner is None:
+            import jax.numpy as jnp
+            from repro.core.engine_model import flatten_active_idx
+            sess.runner = self._runner_for(int(sess.prompt.shape[-1])
+                                           + sess.max_new_tokens + 1)
+            sess.last, sess.cache, aux = sess.runner._prefill(
+                self.params, jnp.asarray(sess.prompt))
+            sess._pos_sets = [np.asarray(a)
+                              for a in flatten_active_idx(self.cfg, aux)]
+        pad = sess.prompt.shape[-1] - sess.prompt_len   # left padding
+        idx = pad + sess.prompt_done + n - 1            # chunk's last pos
+        out = []
+        for arr in sess._pos_sets:
+            if arr.ndim > 1:
+                flat = arr.reshape(-1, arr.shape[-1])
+                out.append(flat[min(idx, flat.shape[0] - 1)])
+            else:
+                out.append(arr)
+        return out
+
+    def prefill(self, prompt=None, *, rid: int = 0,
+                prompt_len: Optional[int] = None,
+                max_new_tokens: int = 32) -> DecodeSession:
+        """Monolithic prefill: :meth:`begin_prefill` + one full-length
+        :meth:`prefill_chunk` (the pre-chunking behaviour — one pass over
+        all layers, compute scaled by the whole prompt length)."""
+        sess = self.begin_prefill(prompt, rid=rid, prompt_len=prompt_len,
+                                  max_new_tokens=max_new_tokens)
+        self.prefill_chunk(sess)
         return sess
 
     def decode_step(self, sessions: Sequence[DecodeSession]) -> StepReport:
         """One decode step for a batch of sessions: every session advances
         one token; weight traffic is charged once for the union of the
-        batch's active sets while compute scales with the batch size."""
+        batch's active sets while compute scales with the batch size.
+        Returns a :class:`StepReport` whose ``modeled_s`` (s) is the clock
+        delta charged for the step and ``compute_s`` (s) the
+        accelerator-busy share; KV growth is *not* included — the
+        scheduler charges it separately via the tiered KV cache."""
         B = len(sessions)
         assert B >= 1
         if self.mode == "zero_infinity":

@@ -1,8 +1,19 @@
-"""Multi-request serving launcher: continuous batching + tiered KV cache.
+"""Multi-request serving launcher: continuous batching + tiered KV cache
++ pluggable scheduling policies (FCFS / SLO-aware EDF / carbon-aware).
 
 Paper-scale analytic mode (modeled clock, Poisson arrivals):
   PYTHONPATH=src python -m repro.launch.server --paper-model llama-7b \
       --requests 16 --rate 4.0 --max-batch 8 --dram-gb 6
+
+SLO-aware serving of a bursty workload with chunked prefill:
+  PYTHONPATH=src python -m repro.launch.server --paper-model llama-7b \
+      --workload bursty --policy slo --slo interactive:0.5,batch:0.5 \
+      --prefill-chunk 16 --requests 24
+
+Carbon-aware deferral against a synthetic diurnal grid trace:
+  PYTHONPATH=src python -m repro.launch.server --paper-model llama-7b \
+      --workload bursty --policy carbon --carbon-trace diurnal \
+      --slo interactive:0.5,batch:0.5 --requests 24
 
 Real tiny model (actual decode, modeled clock):
   PYTHONPATH=src python -m repro.launch.server --arch qwen2.5-14b --tiny \
@@ -17,8 +28,10 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.core.carbon import CarbonIntensityTrace
 from repro.core.engine import PAPER_MODELS, M2CacheEngine
-from repro.serving import (ContinuousBatchScheduler, poisson_trace,
+from repro.serving import (ContinuousBatchScheduler, assign_slo_classes,
+                           bursty_trace, make_policy, poisson_trace,
                            requests_from_trace)
 
 
@@ -41,6 +54,45 @@ def build_engine(args) -> M2CacheEngine:
                          dram_capacity_gb=args.dram_gb, seed=args.seed)
 
 
+def build_trace(args):
+    """``--carbon-trace``: 'constant', 'square', 'diurnal' or a CSV path
+    of ``time_s,g_per_kwh`` rows on the modeled clock."""
+    name = args.carbon_trace
+    if name is None or name == "constant":
+        return CarbonIntensityTrace.constant()
+    if name == "square":
+        return CarbonIntensityTrace.square()
+    if name == "diurnal":
+        return CarbonIntensityTrace.diurnal()
+    return CarbonIntensityTrace.from_csv(name)
+
+
+def parse_slo_mix(spec: str):
+    """``interactive:0.5,batch:0.5`` -> {class: weight}."""
+    mix = {}
+    for part in spec.split(","):
+        name, _, w = part.partition(":")
+        mix[name.strip()] = float(w) if w else 1.0
+    return mix
+
+
+def build_workload(args):
+    if args.workload == "bursty":
+        events = bursty_trace(args.requests, burst_size=args.burst_size,
+                              burst_gap_s=args.burst_gap,
+                              rate_in_burst_rps=args.rate, seed=args.seed,
+                              prompt_len=tuple(args.prompt_len),
+                              gen_len=tuple(args.gen_len))
+    else:
+        events = poisson_trace(args.requests, args.rate, seed=args.seed,
+                               prompt_len=tuple(args.prompt_len),
+                               gen_len=tuple(args.gen_len))
+    if args.slo:
+        events = assign_slo_classes(events, parse_slo_mix(args.slo),
+                                    seed=args.seed)
+    return events
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -54,12 +106,30 @@ def main():
     ap.add_argument("--no-ssd", action="store_true")
     ap.add_argument("--dram-gb", type=float, default=6.0)
     # workload
+    ap.add_argument("--workload", default="poisson",
+                    choices=["poisson", "bursty"])
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0,
                     help="Poisson arrival rate (req/s, modeled clock)")
+    ap.add_argument("--burst-size", type=int, default=6)
+    ap.add_argument("--burst-gap", type=float, default=30.0,
+                    help="silence between bursts (s, bursty workload)")
     ap.add_argument("--prompt-len", type=int, nargs=2, default=(16, 48))
     ap.add_argument("--gen-len", type=int, nargs=2, default=(16, 32))
-    # scheduler / KV
+    ap.add_argument("--slo", default=None,
+                    help="SLO class mix, e.g. interactive:0.5,batch:0.5 "
+                         "(classes from repro.serving.request.SLO_CLASSES)")
+    # scheduler / policy / KV
+    ap.add_argument("--policy", default="fcfs",
+                    choices=["fcfs", "slo", "carbon"])
+    ap.add_argument("--carbon-trace", default=None,
+                    help="constant | square | diurnal | CSV path "
+                         "(time_s,g_per_kwh)")
+    ap.add_argument("--carbon-threshold", type=float, default=300.0,
+                    help="gCO2/kWh at/below which deferrable work starts")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens prefix-charged per scheduler "
+                         "iteration (default: whole prompt at once)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--hbm-kv-gb", type=float, default=0.5)
     ap.add_argument("--dram-kv-gb", type=float, default=1.0)
@@ -67,14 +137,18 @@ def main():
     args = ap.parse_args()
 
     eng = build_engine(args)
-    trace = poisson_trace(args.requests, args.rate, seed=args.seed,
-                          prompt_len=tuple(args.prompt_len),
-                          gen_len=tuple(args.gen_len))
+    trace = build_workload(args)
     vocab = eng.cfg.vocab_size if eng.cfg is not None else None
     reqs = requests_from_trace(trace, vocab_size=vocab, seed=args.seed)
+    carbon_trace = build_trace(args)
+    policy = make_policy(args.policy, trace=carbon_trace,
+                         threshold_g_kwh=args.carbon_threshold)
     sched = ContinuousBatchScheduler(eng, max_batch=args.max_batch,
                                      hbm_kv_gb=args.hbm_kv_gb,
-                                     dram_kv_gb=args.dram_kv_gb)
+                                     dram_kv_gb=args.dram_kv_gb,
+                                     policy=policy,
+                                     prefill_chunk=args.prefill_chunk,
+                                     carbon_trace=carbon_trace)
     rep = sched.run(reqs)
     print(json.dumps({
         "summary": rep.summary(),

@@ -15,6 +15,14 @@ and cold blocks spill to flash. This module implements exactly that:
   (PCIe for HBM⇄DRAM, NVMe for DRAM⇄SSD) that the scheduler charges to
   the engine clock, so KV paging shows up in ``modeled_s`` and therefore
   in token rates, latency percentiles and carbon.
+
+Units and clock semantics: every public mutator (``alloc`` / ``extend`` /
+``append_token`` / ``ensure_resident`` / ``swap_out``) returns **modeled
+seconds** of transfer time for the caller to charge to the engine clock
+via ``M2CacheEngine.advance_clock`` — the cache never advances a clock
+itself. Capacities and ``stats()`` byte counters are **real (unscaled)
+bytes**; on-disk surrogate files are smaller by ``byte_scale``. ``tokens``
+counts prompt + generated tokens currently stored per request.
 """
 from __future__ import annotations
 
@@ -167,6 +175,18 @@ class TieredKVCache:
         self.tokens[rid] = ntokens
         dt = 0.0
         for _ in range(self.blocks_for(ntokens)):
+            dt += self._new_block(rid, protect)
+        return self._charge(dt)
+
+    def extend(self, rid: int, ntokens: int,
+               protect: Iterable[int] = ()) -> float:
+        """Grow (or create) a request's KV by ``ntokens`` prompt tokens —
+        the chunked-prefill allocation path. Returns modeled seconds."""
+        if rid not in self.table:
+            return self.alloc(rid, ntokens, protect)
+        self.tokens[rid] += ntokens
+        dt = 0.0
+        while self.blocks_for(self.tokens[rid]) > len(self.table[rid]):
             dt += self._new_block(rid, protect)
         return self._charge(dt)
 

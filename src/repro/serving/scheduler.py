@@ -3,15 +3,25 @@
 Two schedulers:
 
 * :class:`FCFSScheduler` — the original minimal batch-of-prompts queue,
-  kept for the ``examples/serve_offload.py`` closed-loop driver.
+  kept for closed-loop drivers that batch whole `generate()` calls.
 * :class:`ContinuousBatchScheduler` — the serving subsystem proper: admits
-  trace-driven arrivals, forms a fresh decode batch every step (finished
-  requests leave, queued requests join without waiting for the batch to
-  drain), and preempts LIFO under KV memory pressure, swapping preempted
-  requests' KV through the tiered HBM→DRAM→SSD cache. Every cost — prefill,
-  batched decode, KV swaps — lands on the engine's modeled transfer clock,
-  so throughput/latency/carbon are directly comparable with the paper's
-  single-request numbers.
+  trace-driven arrivals under a pluggable :class:`SchedulingPolicy`
+  (FCFS / SLO-aware EDF / carbon-aware — ``serving/policy.py``), chunks
+  prefill into fixed-token slices interleaved with decode steps, forms a
+  fresh decode batch every step (finished requests leave, queued requests
+  join without waiting for the batch to drain), and preempts under KV
+  memory pressure — including mid-prefill — swapping preempted requests'
+  KV through the tiered HBM→DRAM→SSD cache.
+
+Units and clock semantics: every cost — prefill chunks, batched decode,
+KV swaps, idle gaps — lands on the engine's modeled transfer clock in
+**seconds** (`M2CacheEngine.clock`); request timestamps (`arrival_s`,
+`admitted_s`, `first_token_s`, `finish_s`) are rebased to the run's clock
+origin, so latencies are plain differences. Carbon is integrated
+step-by-step by a :class:`~repro.core.carbon.CarbonAccountant` in
+**gCO2**, pricing each iteration's energy (J) at the grid intensity of
+that moment, which is what makes carbon-aware deferral visible in
+gCO2/request. Byte quantities in reports are real (unscaled) bytes.
 
 The paper caps usable batch size (Deja Vu predictors degrade at large
 batch — §5.5.2), so ``max_batch`` defaults stay small.
@@ -26,11 +36,12 @@ import numpy as np
 
 from repro.core import carbon as carbon_mod
 from repro.serving.kv_cache import TieredKVCache
+from repro.serving.policy import FCFSPolicy, SchedulingPolicy
 from repro.serving.request import RequestState, ServingRequest
 
 
 # ---------------------------------------------------------------------------
-# legacy minimal scheduler (examples/serve_offload.py)
+# legacy minimal scheduler (closed-loop batch drivers)
 
 
 @dataclasses.dataclass
@@ -100,6 +111,9 @@ class ServingReport:
     kv_stats: Dict[str, float]
     cache_stats: Dict[str, float]
     carbon: Dict[str, float]
+    policy: str = "fcfs"
+    prefill_chunks: int = 0
+    mid_prefill_preemptions: int = 0
 
     @property
     def tokens_per_s(self) -> float:
@@ -114,11 +128,38 @@ class ServingReport:
         return [r.latency_s for r in self.requests
                 if r.latency_s is not None]
 
+    def slo_summary(self) -> Dict[str, float]:
+        """SLO attainment over finished requests that carry an SLO.
+
+        ``slo_attainment`` is the fraction meeting *all three* bounds
+        (TTFT, TPOT, completion deadline); per-class and per-bound
+        breakdowns let benchmarks show where a policy wins."""
+        with_slo = [r for r in self.requests if r.slo is not None]
+        if not with_slo:
+            return {}
+        n = len(with_slo)
+        out = {
+            "slo_requests": n,
+            "slo_attainment": sum(bool(r.slo_met()) for r in with_slo) / n,
+            "ttft_attainment":
+                sum(r.ttft_s <= r.slo.ttft_s for r in with_slo) / n,
+            "tpot_attainment":
+                sum(r.tpot_s <= r.slo.tpot_s for r in with_slo) / n,
+            "deadline_attainment":
+                sum(r.latency_s <= r.slo.deadline_s for r in with_slo) / n,
+        }
+        for cls in sorted({r.slo.name for r in with_slo}):
+            grp = [r for r in with_slo if r.slo.name == cls]
+            out[f"slo_attainment_{cls}"] = \
+                sum(bool(r.slo_met()) for r in grp) / len(grp)
+        return out
+
     def summary(self) -> Dict[str, float]:
         lat = self.latencies
         ttft = [r.ttft_s for r in self.requests if r.ttft_s is not None]
         n = max(len(self.requests), 1)
-        return {
+        out = {
+            "policy": self.policy,
             "requests": len(self.requests),
             "total_tokens": self.total_tokens,
             "modeled_span_s": self.modeled_span_s,
@@ -132,16 +173,38 @@ class ServingReport:
             "gco2_per_request": self.carbon["total_g"] / n,
             "gco2_total": self.carbon["total_g"],
         }
+        out.update(self.slo_summary())
+        if "mean_intensity_g_kwh" in self.carbon:
+            out["mean_intensity_g_kwh"] = \
+                self.carbon["mean_intensity_g_kwh"]
+        return out
 
 
 class ContinuousBatchScheduler:
-    """Drives an :class:`M2CacheEngine` step-by-step over an open queue."""
+    """Drives an :class:`M2CacheEngine` step-by-step over an open queue.
+
+    ``policy`` picks admission order, carbon gating and preemption victims
+    (default :class:`FCFSPolicy` = PR-1 behaviour). ``prefill_chunk``
+    bounds how many prompt tokens one scheduler iteration may prefill per
+    request (None = monolithic: the whole prompt in one charge); chunking
+    lets decode steps of running requests interleave with a long prompt's
+    prefill and allows preemption mid-prefill. ``carbon_trace`` prices
+    each iteration's energy at that moment's grid intensity (defaults to
+    the paper's constant 820 gCO2/kWh).
+    """
 
     def __init__(self, engine, kv: Optional[TieredKVCache] = None, *,
                  max_batch: int = 8, hbm_kv_gb: float = 0.25,
-                 dram_kv_gb: float = 1.0):
+                 dram_kv_gb: float = 1.0,
+                 policy: Optional[SchedulingPolicy] = None,
+                 prefill_chunk: Optional[int] = None,
+                 carbon_trace: Optional[
+                     carbon_mod.CarbonIntensityTrace] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.engine = engine
         if kv is None:
             import os
@@ -153,47 +216,87 @@ class ContinuousBatchScheduler:
                 bytes_per_token=engine.kv_bytes_per_token())
         self.kv = kv
         self.max_batch = max_batch
+        self.policy = policy or FCFSPolicy()
+        self.prefill_chunk = prefill_chunk
+        self.carbon_trace = carbon_trace
         self._t0 = 0.0                   # run()'s clock origin
 
     # ------------------------------------------------------------------
-    def _admit(self, req: ServingRequest,
-               running: List[ServingRequest]) -> float:
-        """Admit one request; returns its prefill compute seconds."""
+    def _dram_gb(self) -> float:
+        """Current resident DRAM (weights + KV) in GiB, for carbon."""
+        eng = self.engine
+        weights = eng.manager.dram.used_bytes if eng.manager else \
+            eng.num_layers * eng._layer_bytes_fp16()
+        return (weights + self.kv.dram.used_bytes) / 2**30
+
+    def _admit(self, req: ServingRequest, active: List[ServingRequest]):
+        """Admit (or resume) one request into the active set."""
         eng, kv = self.engine, self.kv
-        protect = [r.rid for r in running] + [req.rid]
-        compute_s = 0.0
+        protect = [r.rid for r in active] + [req.rid]
         if req.state is RequestState.PREEMPTED:
-            # resume: KV swaps back in; no prefill re-run
+            # resume: KV swaps back in; prefill continues where it stopped
             eng.advance_clock(kv.ensure_resident(req.rid, protect))
         else:
-            req.session = eng.prefill(
+            req.session = eng.begin_prefill(
                 req.prompt, rid=req.rid, prompt_len=req.prompt_len,
                 max_new_tokens=req.max_new_tokens)
-            compute_s = req.session.prefill_report.compute_s
-            eng.advance_clock(kv.alloc(req.rid, req.prompt_len, protect))
             req.admitted_s = eng.clock - self._t0
-        req.state = RequestState.RUNNING
-        running.append(req)
-        return compute_s
+        req.state = RequestState.RUNNING if req.prefilled \
+            else RequestState.PREFILLING
+        active.append(req)
 
-    def _preempt(self, running: List[ServingRequest],
-                 queue: RequestQueue) -> int:
-        """LIFO-preempt until the KV working set fits its HBM budget."""
-        n = 0
-        while self.kv.over_budget() and len(running) > 1:
-            victim = running.pop()           # youngest admitted
+    def _prefill_step(self, active: List[ServingRequest]) -> tuple:
+        """One prefill chunk for every PREFILLING request; returns
+        (compute seconds, chunks charged)."""
+        eng, kv = self.engine, self.kv
+        compute_s, chunks = 0.0, 0
+        protect = [r.rid for r in active]
+        for r in active:
+            if r.state is not RequestState.PREFILLING:
+                continue
+            rep = eng.prefill_chunk(r.session, self.prefill_chunk)
+            eng.advance_clock(kv.extend(r.rid, rep.batch_size, protect))
+            r.prompt_done = r.session.prompt_done
+            compute_s += rep.compute_s
+            chunks += 1
+            if r.prefilled:
+                r.state = RequestState.RUNNING
+        return compute_s, chunks
+
+    def _preempt(self, active: List[ServingRequest],
+                 waiting: List[ServingRequest]) -> tuple:
+        """Policy-ordered preemption until the KV working set fits its HBM
+        budget; PREFILLING requests may be preempted mid-prefill and
+        resume from ``prompt_done``. Returns (total, mid-prefill) counts."""
+        n = mid = 0
+        while self.kv.over_budget() and len(active) > 1:
+            victim = self.policy.victim_order(active)[0]
+            active.remove(victim)
             self.engine.advance_clock(self.kv.swap_out(victim.rid))
+            if victim.state is RequestState.PREFILLING:
+                mid += 1
             victim.state = RequestState.PREEMPTED
             victim.preemptions += 1
-            queue.push_front(victim)
+            waiting.append(victim)
             n += 1
-        return n
+        return n, mid
 
-    def run(self, requests: List[ServingRequest]) -> ServingReport:
+    def run(self, requests: List[ServingRequest], *,
+            horizon_s: Optional[float] = None) -> ServingReport:
+        """Serve ``requests`` to completion; returns the run's report.
+
+        ``horizon_s`` (modeled seconds from the run origin) bills the
+        server's idle base power out to a fixed serving window even after
+        the last request finishes. Policy comparisons need this: a
+        carbon-aware policy *shifts* work inside the window, and only a
+        common window makes gCO2/request comparable (the server is on
+        either way). Latencies and tokens/s are unaffected; if the run
+        outlives the horizon, billing simply ends at the true span.
+        """
         eng, kv = self.engine, self.kv
         pending = sorted(requests, key=lambda r: r.arrival_s)
-        queue = RequestQueue()
-        running: List[ServingRequest] = []
+        waiting: List[ServingRequest] = []
+        active: List[ServingRequest] = []    # PREFILLING + RUNNING
         finished: List[ServingRequest] = []
         i = 0
         clock_start = eng.clock
@@ -201,67 +304,96 @@ class ContinuousBatchScheduler:
         # to this run's clock origin so latency = finish - arrival holds
         # (the engine clock starts at warmup and accumulates across runs)
         self._t0 = clock_start
-        compute_s = 0.0
+        accountant = carbon_mod.CarbonAccountant(
+            device_name=eng.device_name, ssd_active=eng.use_ssd,
+            trace=self.carbon_trace)
         decode_steps = 0
         preemptions = 0
+        mid_prefill_preemptions = 0
+        prefill_chunks = 0
 
-        while i < len(pending) or queue or running:
+        while i < len(pending) or waiting or active:
+            iter_clock0 = eng.clock
+            iter_compute = 0.0
             now = eng.clock - clock_start
             while i < len(pending) and pending[i].arrival_s <= now:
-                queue.push(pending[i])
+                waiting.append(pending[i])
                 i += 1
-            if not running and not queue:
-                # idle until the next arrival
-                eng.advance_clock(pending[i].arrival_s - now)
+            if not active and not any(self.policy.may_start(r, now)
+                                      for r in waiting):
+                # idle: jump to the next arrival or the earliest moment a
+                # held (carbon-deferred) request may start
+                targets = [pending[i].arrival_s] if i < len(pending) else []
+                for r in waiting:
+                    h = self.policy.holdoff_until(r, now)
+                    if h is not None:
+                        targets.append(h)
+                if not targets:
+                    raise RuntimeError(
+                        f"policy {self.policy.name!r} holds requests "
+                        "without a holdoff_until time")
+                dt = max(min(targets) - now, 1e-9)
+                eng.advance_clock(dt)
+                accountant.charge(now, dt, 0.0, self._dram_gb(),
+                                  active=False)
                 continue
-            # admit up to max_batch; stop when the KV budget says no
-            while queue and len(running) < self.max_batch:
-                nxt = queue.peek()
-                fits = kv.can_admit(nxt.total_tokens,
-                                    [r.rid for r in running])
-                if not fits and running:
+            # admit in policy order up to max_batch; stop when the KV
+            # budget says no (carbon-held requests are skipped, not
+            # blocking the ones behind them)
+            for req in self.policy.admission_order(waiting, now):
+                if len(active) >= self.max_batch:
                     break
-                compute_s += self._admit(queue.pop(), running)
-            preemptions += self._preempt(running, queue)
-            if not running:
-                continue
-            # one continuous-batching decode step
-            rep = eng.decode_step([r.session for r in running])
-            compute_s += rep.compute_s
-            decode_steps += 1
-            for r in running:
-                kv.touch(r.rid)
-                eng.advance_clock(
-                    kv.append_token(r.rid, [x.rid for x in running]))
-                r.generated += 1
-                if r.first_token_s is None:
-                    r.first_token_s = eng.clock - clock_start
-            still = []
-            for r in running:
-                if r.done:
-                    r.state = RequestState.FINISHED
-                    r.finish_s = eng.clock - clock_start
-                    kv.free(r.rid)
-                    finished.append(r)
-                else:
-                    still.append(r)
-            running = still
+                if not self.policy.may_start(req, now):
+                    continue
+                if not kv.can_admit(max(req.total_tokens, 1),
+                                    [r.rid for r in active]) and active:
+                    break
+                waiting.remove(req)
+                self._admit(req, active)
+            # one prefill chunk per prefilling request, then resolve KV
+            # pressure (possibly preempting mid-prefill), then decode
+            comp, chunks = self._prefill_step(active)
+            iter_compute += comp
+            prefill_chunks += chunks
+            n, mid = self._preempt(active, waiting)
+            preemptions += n
+            mid_prefill_preemptions += mid
+            running = [r for r in active if r.state is RequestState.RUNNING]
+            if running:
+                rep = eng.decode_step([r.session for r in running])
+                iter_compute += rep.compute_s
+                decode_steps += 1
+                for r in running:
+                    kv.touch(r.rid)
+                    eng.advance_clock(
+                        kv.append_token(r.rid, [x.rid for x in active]))
+                    r.generated += 1
+                    if r.first_token_s is None:
+                        r.first_token_s = eng.clock - clock_start
+                for r in running:
+                    if r.done:
+                        r.state = RequestState.FINISHED
+                        r.finish_s = eng.clock - clock_start
+                        kv.free(r.rid)
+                        finished.append(r)
+                        active.remove(r)
+            accountant.charge(iter_clock0 - clock_start,
+                              eng.clock - iter_clock0, iter_compute,
+                              self._dram_gb())
 
         span = eng.clock - clock_start
+        if horizon_s is not None and horizon_s > span:
+            # bill trailing idle (deep-idle power) to the fixed serving
+            # window; the engine clock itself stays at the true span
+            accountant.charge(span, horizon_s - span, 0.0, self._dram_gb(),
+                              active=False)
         total_tokens = sum(r.generated for r in finished)
-        mgr = eng.manager
-        dram_gb = ((mgr.dram.used_bytes if mgr else
-                    eng.num_layers * eng._layer_bytes_fp16())
-                   + kv.dram.used_bytes) / 2**30
-        carbon = carbon_mod.total_carbon(
-            span, device_name=eng.device_name,
-            accelerator_util=min(compute_s / max(span, 1e-12), 1.0),
-            dram_gb=dram_gb, ssd_active=eng.use_ssd)
+        carbon = accountant.totals()
         cache_stats = {}
-        if mgr:
+        if eng.manager:
             cache_stats = {
-                "hbm_hit_ratio": mgr.hbm.hit_ratio,
-                "dram_hit_ratio": mgr.dram.hit_ratio,
+                "hbm_hit_ratio": eng.manager.hbm.hit_ratio,
+                "dram_hit_ratio": eng.manager.dram.hit_ratio,
                 "ssd_bytes_read": int(eng.ssd.bytes_read
                                       * eng._file_byte_scale),
             }
@@ -269,4 +401,6 @@ class ContinuousBatchScheduler:
             requests=finished, modeled_span_s=span,
             total_tokens=total_tokens, decode_steps=decode_steps,
             preemptions=preemptions, kv_stats=kv.stats(),
-            cache_stats=cache_stats, carbon=carbon)
+            cache_stats=cache_stats, carbon=carbon,
+            policy=self.policy.name, prefill_chunks=prefill_chunks,
+            mid_prefill_preemptions=mid_prefill_preemptions)

@@ -1,18 +1,24 @@
 """Arrival workloads for the serving subsystem.
 
 ``poisson_trace`` draws exponential inter-arrival gaps (the open-loop
-"heavy traffic" model); ``closed_trace`` releases everything at t=0 (the
-offline-batch model). Traces are plain event lists so recorded production
-traces can be replayed through ``requests_from_trace`` unchanged.
+"heavy traffic" model); ``bursty_trace`` clusters arrivals into bursts
+separated by idle gaps (the flash-crowd model that makes scheduling
+policies matter — under a burst the queue is deep and admission *order*
+decides who meets their TTFT); ``closed_trace`` releases everything at
+t=0 (the offline-batch model). Traces are plain event lists so recorded
+production traces can be replayed through ``requests_from_trace``
+unchanged. Events may carry an ``slo_class`` naming an entry of
+``repro.serving.request.SLO_CLASSES``; ``assign_slo_classes`` samples a
+mix over an existing trace. All times are modeled-clock seconds.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.serving.request import ServingRequest
+from repro.serving.request import SLO_CLASSES, ServingRequest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,6 +27,7 @@ class ArrivalEvent:
     arrival_s: float
     prompt_len: int
     max_new_tokens: int
+    slo_class: Optional[str] = None    # key into SLO_CLASSES, or None
 
 
 def poisson_trace(n: int, rate_rps: float, *, seed: int = 0,
@@ -38,10 +45,51 @@ def poisson_trace(n: int, rate_rps: float, *, seed: int = 0,
     return events
 
 
+def bursty_trace(n: int, *, burst_size: int = 6, burst_gap_s: float = 30.0,
+                 rate_in_burst_rps: float = 8.0, seed: int = 0,
+                 prompt_len: Tuple[int, int] = (16, 64),
+                 gen_len: Tuple[int, int] = (16, 32)) -> List[ArrivalEvent]:
+    """Bursts of ``burst_size`` Poisson arrivals at ``rate_in_burst_rps``,
+    separated by ``burst_gap_s`` of silence — queueing pressure inside the
+    burst, slack between bursts (where a carbon policy can place work)."""
+    rng = np.random.default_rng(seed)
+    events = []
+    t = 0.0
+    rid = 0
+    while rid < n:
+        for _ in range(min(burst_size, n - rid)):
+            t += float(rng.exponential(1.0 / rate_in_burst_rps))
+            events.append(ArrivalEvent(
+                rid=rid, arrival_s=t,
+                prompt_len=int(rng.integers(prompt_len[0],
+                                            prompt_len[1] + 1)),
+                max_new_tokens=int(rng.integers(gen_len[0],
+                                                gen_len[1] + 1))))
+            rid += 1
+        t += burst_gap_s
+    return events
+
+
 def closed_trace(n: int, *, prompt_len: int = 32,
                  gen_len: int = 32) -> List[ArrivalEvent]:
     return [ArrivalEvent(rid=i, arrival_s=0.0, prompt_len=prompt_len,
                          max_new_tokens=gen_len) for i in range(n)]
+
+
+def assign_slo_classes(events: Sequence[ArrivalEvent],
+                       mix: Dict[str, float], *,
+                       seed: int = 0) -> List[ArrivalEvent]:
+    """Sample an SLO class per event from ``mix`` (class name -> weight;
+    weights are normalised). Classes must exist in ``SLO_CLASSES``."""
+    for name in mix:
+        if name not in SLO_CLASSES:
+            raise ValueError(f"unknown SLO class {name!r}")
+    names = list(mix)
+    w = np.asarray([mix[k] for k in names], dtype=float)
+    w = w / w.sum()
+    rng = np.random.default_rng(seed)
+    return [dataclasses.replace(e, slo_class=str(rng.choice(names, p=w)))
+            for e in events]
 
 
 def requests_from_trace(events: Sequence[ArrivalEvent], *,
@@ -51,7 +99,8 @@ def requests_from_trace(events: Sequence[ArrivalEvent], *,
     prompts (left-padded to the trace's max length so the real-tiny engine
     jits one prefill shape). ``prompt_len`` stays the *true* length so
     modeled prefill compute, KV footprint and admission checks are not
-    skewed toward the longest prompt in the trace."""
+    skewed toward the longest prompt in the trace. Events with an
+    ``slo_class`` get the matching :class:`SLOSpec` attached."""
     rng = np.random.default_rng(seed)
     pad_to = max((e.prompt_len for e in events), default=0)
     out = []
@@ -63,5 +112,6 @@ def requests_from_trace(events: Sequence[ArrivalEvent], *,
         out.append(ServingRequest(
             rid=e.rid, prompt_len=e.prompt_len,
             max_new_tokens=e.max_new_tokens,
-            arrival_s=e.arrival_s, prompt=prompt))
+            arrival_s=e.arrival_s, prompt=prompt,
+            slo=SLO_CLASSES[e.slo_class] if e.slo_class else None))
     return out
