@@ -17,13 +17,14 @@ even though this container has no GPU.
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.cache.dram_cache import DRAMCache
 from repro.core.cache.hbm_cache import HBMCache
-from repro.core.cache.preloader import Preloader
+from repro.core.cache.preloader import Preloader, PrefetchEngine
 from repro.core.cache.ssd_tier import SSDTier
 from repro.core.hw import HOST, HostHW
 from repro.core.quantize import bytes_per_neuron
@@ -49,7 +50,8 @@ class MultiLevelCacheManager:
                  hbm_policy: str = "atu", use_ssd: bool = True,
                  lookahead: int = 2, hw: HostHW = HOST,
                  layer_flops: float = 0.0, byte_scale: float = 1.0,
-                 ssd_miss_frac: float = 1.0):
+                 ssd_miss_frac: float = 1.0,
+                 prefetch: Optional[PrefetchEngine] = None):
         self.num_layers = num_layers
         self.d_model = d_model
         self.hw = hw
@@ -62,7 +64,8 @@ class MultiLevelCacheManager:
         self.preloader = Preloader(ssd, self.dram, num_layers=num_layers,
                                    ssd_bw=hw.ssd_bw, lookahead=lookahead,
                                    byte_scale=byte_scale,
-                                   miss_frac=ssd_miss_frac)
+                                   miss_frac=ssd_miss_frac,
+                                   prefetch=prefetch)
         self.layer_flops = layer_flops
         self.clock = 0.0
         if not use_ssd:
@@ -105,7 +108,16 @@ class MultiLevelCacheManager:
                 + s.copies * 5e-6            # per-copy launch latency
             comp_s = self.compute_time(len(active_sets[l]), tier_maps[l]) \
                 * batch_size
-            layer_s = max(comp_s, load_s) + stall
+            # decode is bandwidth-bound: the layer's kernels stream the
+            # active set's mixed-precision bytes from HBM once per
+            # dispatch — the term continuous batching amortises across
+            # the batch (a per-session dispatch re-reads it per session)
+            tier_counts = Counter(tier_maps[l].values())
+            read_s = sum(c * bytes_per_neuron(self.d_model, t)
+                         for t, c in tier_counts.items()) \
+                / (self.hw.hbm_bw * self.hw.mem_util)
+            layer_s = max(comp_s, load_s, read_s) + stall \
+                + self.hw.kernel_launch_s
             self.clock += layer_s
             t_compute += comp_s
             t_hbm += load_s

@@ -1,23 +1,131 @@
-"""Pattern-aware SSD→DRAM preloader (paper §5.4, Fig. 8).
+"""Async prefetch engine + pattern-aware SSD→DRAM weight preloader.
 
-The paper measures one-layer SSD→DRAM load ≈ 2× one-layer compute, so the
-preloader keeps ``lookahead`` layers of headroom ahead of the compute front
-(≥2). Loads are *layer-wise* (the paper's tradeoff analysis: neuron-level
-preloading needs multi-layer activation prediction whose accuracy decays —
-§5.4), but only the neurons *missing* from DRAM are fetched when a layer is
-partially resident.
+Two layers:
 
-The preloader runs on the modeled transfer clock: SSD transfers overlap
-compute; the clock charges a stall only when the compute front catches up
-with an unfinished load.
+* :class:`PrefetchEngine` — a generic modeled-clock DMA model shared by
+  *weights* and *KV* prefetch. Each named channel (``"ssd"`` for
+  flash→DRAM, ``"pcie"`` for DRAM→HBM) is a serial transfer queue with
+  its own bandwidth: a transfer issued at modeled time *t* starts at
+  ``max(t, channel_free)`` and finishes after ``nbytes / bw``. Consumers
+  issue transfers ahead of need and later ``wait()`` on them; the wait
+  returns only the *residual* stall — zero when the transfer fully
+  overlapped with compute. Weight preloads and KV block promotions share
+  the same channels, so flash-bus contention between the two is modeled
+  (one NVMe serves both).
+* :class:`Preloader` — the paper's §5.4 layer-wise SSD→DRAM weight
+  preloader, now sitting on a :class:`PrefetchEngine` channel. The paper
+  measures one-layer SSD→DRAM load ≈ 2× one-layer compute, so the
+  preloader keeps ``lookahead`` layers of headroom ahead of the compute
+  front (≥2). Loads are *layer-wise* (neuron-level preloading needs
+  multi-layer activation prediction whose accuracy decays — §5.4), but
+  only the neurons *missing* from DRAM are fetched when a layer is
+  partially resident.
+
+The clock charges a stall only when the compute front catches up with an
+unfinished transfer; bytes that arrived in time are counted as
+*overlapped* — the quantity benchmarks and carbon accounting report.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
-from repro.core.cache.dram_cache import DRAMCache
-from repro.core.cache.ssd_tier import SSDTier
+
+@dataclasses.dataclass
+class PrefetchStats:
+    """Aggregate transfer accounting for one engine (or one channel)."""
+    issued: int = 0               # transfers enqueued
+    issued_bytes: float = 0.0     # real bytes enqueued
+    overlapped_bytes: float = 0.0  # bytes that arrived before they were needed
+    stalled_bytes: float = 0.0    # bytes the compute front had to wait on
+    stall_s: float = 0.0          # total residual wait (modeled s)
+    waits: int = 0                # wait() calls that found a transfer
+    hits: int = 0                 # waits that found it already complete
+
+
+class PrefetchEngine:
+    """Modeled async DMA: named serial channels + keyed in-flight transfers.
+
+    All times are modeled-clock seconds. A transfer is identified by an
+    arbitrary hashable ``key`` (weights use ``("w", layer)``, KV uses
+    ``("kv", block_id)``); re-issuing a key replaces the old record.
+    ``wait`` pops the record, so each transfer's bytes are classified
+    exactly once as overlapped or stalled.
+    """
+
+    def __init__(self):
+        self._bw: Dict[str, float] = {}
+        self._free_at: Dict[str, float] = {}
+        self._inflight: Dict[object, Tuple[float, float]] = {}  # key -> (ready, bytes)
+        self.stats = PrefetchStats()
+
+    def add_channel(self, name: str, bw: float):
+        """Register (or re-register) a channel; idempotent per name."""
+        if name not in self._bw:
+            self._bw[name] = float(bw)
+            self._free_at[name] = 0.0
+
+    def has_channel(self, name: str) -> bool:
+        return name in self._bw
+
+    def channel_free_at(self, name: str) -> float:
+        return self._free_at[name]
+
+    def issue(self, channel: str, key, nbytes: float, now: float, *,
+              not_before: float = 0.0) -> float:
+        """Enqueue ``nbytes`` on ``channel`` at modeled time ``now``;
+        returns the finish time. ``not_before`` chains transfers (e.g.
+        SSD→DRAM must land before DRAM→HBM starts)."""
+        start = max(now, self._free_at[channel], not_before)
+        finish = start + nbytes / self._bw[channel]
+        self._free_at[channel] = finish
+        self._inflight[key] = (finish, float(nbytes))
+        self.stats.issued += 1
+        self.stats.issued_bytes += nbytes
+        return finish
+
+    def in_flight(self, key) -> bool:
+        return key in self._inflight
+
+    def ready_at(self, key) -> Optional[float]:
+        rec = self._inflight.get(key)
+        return rec[0] if rec is not None else None
+
+    def transfer_bytes(self, key) -> float:
+        """Bytes of an in-flight transfer (0 when unknown)."""
+        rec = self._inflight.get(key)
+        return rec[1] if rec is not None else 0.0
+
+    def wait(self, key, now: float) -> float:
+        """Compute front needs ``key`` at ``now``: pop the record and
+        return the residual stall (0 when fully overlapped). Unknown keys
+        stall nothing — the caller pays its synchronous path instead."""
+        rec = self._inflight.pop(key, None)
+        if rec is None:
+            return 0.0
+        ready, nbytes = rec
+        self.stats.waits += 1
+        stall = max(ready - now, 0.0)
+        if stall > 0.0:
+            self.stats.stall_s += stall
+            self.stats.stalled_bytes += nbytes
+        else:
+            self.stats.hits += 1
+            self.stats.overlapped_bytes += nbytes
+        return stall
+
+    def cancel(self, key):
+        """Drop an in-flight record (e.g. the block was evicted before
+        use). Issued bytes stay counted — the bus time was spent."""
+        self._inflight.pop(key, None)
+
+    def snapshot(self) -> PrefetchStats:
+        return dataclasses.replace(self.stats)
+
+
+#: channel names shared by weight preloading and KV paging
+SSD_CHANNEL = "ssd"
+PCIE_CHANNEL = "pcie"
 
 
 @dataclasses.dataclass
@@ -25,12 +133,16 @@ class PreloadStats:
     layers_loaded: int = 0
     bytes_loaded: int = 0
     stall_s: float = 0.0
+    overlapped_bytes: float = 0.0
 
 
 class Preloader:
-    def __init__(self, ssd: SSDTier, dram: DRAMCache, *, num_layers: int,
+    """Layer-wise SSD→DRAM weight preloader on a PrefetchEngine channel."""
+
+    def __init__(self, ssd, dram, *, num_layers: int,
                  ssd_bw: float, lookahead: int = 2,
-                 byte_scale: float = 1.0, miss_frac: float = 1.0):
+                 byte_scale: float = 1.0, miss_frac: float = 1.0,
+                 prefetch: Optional[PrefetchEngine] = None):
         self.ssd = ssd
         self.dram = dram
         self.num_layers = num_layers
@@ -44,11 +156,11 @@ class Preloader:
         self._seen = set()
         self.lookahead = max(lookahead, 1)
         self.stats = PreloadStats()
-        # modeled time at which the in-flight SSD queue drains
-        self._ssd_free_at = 0.0
-        # per-layer modeled arrival time (a layer may be *inserted* in DRAM
-        # while its transfer is still in flight on the clock)
-        self._ready_at = {}
+        self.engine = prefetch if prefetch is not None else PrefetchEngine()
+        self.engine.add_channel(SSD_CHANNEL, ssd_bw)
+
+    def _key(self, layer: int):
+        return ("w", layer)
 
     def _load(self, layer: int, now: float) -> float:
         """Queue one layer's SSD→DRAM load; returns its finish time."""
@@ -57,10 +169,8 @@ class Preloader:
         self._seen.add(layer)
         nbytes = sum(a.nbytes for a in banks.values()) * self.byte_scale \
             * frac
-        start = max(now, self._ssd_free_at)
-        finish = start + nbytes / self.ssd_bw
-        self._ssd_free_at = finish
-        self._ready_at[layer] = finish
+        finish = self.engine.issue(SSD_CHANNEL, self._key(layer), nbytes,
+                                   now)
         self.dram.insert(layer, banks)
         self.stats.layers_loaded += 1
         self.stats.bytes_loaded += nbytes
@@ -82,16 +192,16 @@ class Preloader:
         """Called as compute enters ``current_layer``; kicks off the
         lookahead load and returns the stall (s) if the *current* layer's
         data has not finished arriving."""
-        stall = 0.0
+        key = self._key(current_layer)
         # ensure current layer resident (miss -> synchronous fetch = stall);
         # .get() also feeds the DRAM hit/miss statistics
         if self.dram.get(current_layer) is None:
-            finish = self._load(current_layer, now)
-            stall = max(stall, finish - now)
-        else:
-            # in DRAM, but the async transfer may still be in flight
-            ready = self._ready_at.get(current_layer, now)
-            stall = max(stall, ready - now)
+            self._load(current_layer, now)
+        # in DRAM, but the async transfer may still be in flight
+        nbytes = self.engine.transfer_bytes(key)
+        stall = self.engine.wait(key, now)
+        if nbytes and stall == 0.0:
+            self.stats.overlapped_bytes += nbytes
         # fire lookahead for layer+k (wraps to next token's early layers)
         tgt = current_layer + self.lookahead
         tgt_wrapped = tgt % self.num_layers

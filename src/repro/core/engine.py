@@ -30,6 +30,8 @@ import numpy as np
 from repro.core import carbon as carbon_mod
 from repro.core.cache.manager import (MultiLevelCacheManager,
                                       zero_infinity_token_time)
+from repro.core.cache.preloader import (PCIE_CHANNEL, SSD_CHANNEL,
+                                        PrefetchEngine)
 from repro.core.cache.ssd_tier import SSDTier
 from repro.core.hw import HOST, HostHW
 from repro.core.mp_ffn import tier_sizes
@@ -121,6 +123,8 @@ class DecodeSession:
     prompt_done: int = 0                # prefill tokens already charged
     max_new_tokens: int = 0
     _pos_sets: Optional[list] = None    # real: per-layer (P, k) active idx
+    _batch: object = None               # real: DecodeBatch currently joined
+    _row: int = -1                      # real: row inside that batch
 
     @property
     def prefill_complete(self) -> bool:
@@ -134,6 +138,9 @@ class StepReport:
     compute_s: float
     batch_size: int
     report: object = None               # TokenReport when the manager ran
+    jit_dispatches: int = 0             # real decode graphs launched
+    stall_s: float = 0.0                # transfer stalls inside the step
+    overlapped_bytes: float = 0.0       # prefetched bytes that hid in time
 
 
 class M2CacheEngine:
@@ -142,7 +149,7 @@ class M2CacheEngine:
                  use_ssd: bool = True, ssd_dir: Optional[str] = None,
                  dram_capacity_gb: float = 56.0, hw: HostHW = HOST,
                  overlap: float = 0.8, device_name: str = "rtx3090",
-                 seed: int = 0):
+                 seed: int = 0, batched_decode: bool = True):
         assert mode in ("m2cache", "zero_infinity")
         assert (cfg is not None) != (paper_model is not None)
         self.cfg = cfg
@@ -155,7 +162,18 @@ class M2CacheEngine:
         self.overlap = overlap
         self.device_name = device_name
         self.seed = seed
+        # batched_decode=False keeps the legacy one-graph-per-session real
+        # decode (and prices its serial weight traffic honestly); True
+        # packs same-bucket sessions into one vmapped dispatch per step
+        self.batched_decode = batched_decode
         self._ssd_dir = ssd_dir or tempfile.mkdtemp(prefix="m2cache_ssd_")
+        # one modeled async-DMA engine shared by weight preloads and KV
+        # prefetch — both ride the same flash bus and PCIe link
+        self.prefetch = PrefetchEngine()
+        self.prefetch.add_channel(SSD_CHANNEL, hw.ssd_bw)
+        self.prefetch.add_channel(PCIE_CHANNEL, hw.pcie_bw)
+        self.decode_dispatches = 0       # jit decode graphs launched
+        self._batches: Dict[int, object] = {}   # bucket max_seq -> DecodeBatch
 
         if cfg is not None:
             self.num_layers = cfg.num_layers
@@ -185,7 +203,8 @@ class M2CacheEngine:
                 hbm_policy=hbm_policy, use_ssd=use_ssd, hw=hw,
                 layer_flops=self._layer_flops_sparse(),
                 byte_scale=self._file_byte_scale,
-                ssd_miss_frac=self._ssd_miss_frac())
+                ssd_miss_frac=self._ssd_miss_frac(),
+                prefetch=self.prefetch)
 
     # ------------------------------------------------------------------
     def _ssd_miss_frac(self) -> float:
@@ -367,10 +386,13 @@ class M2CacheEngine:
                 sets = [pr.step() for pr in sess.procs] if sess.procs else \
                     [np.zeros(0, np.int64)] * self.num_layers
             tiers = [_tier_map(s, self.sizes) for s in sets]
+            overlapped0 = self.prefetch.stats.overlapped_bytes
             tok = self.manager.process_token(sets, tiers, batch_size=n)
             rep = StepReport(modeled_s=tok.modeled_s,
                              compute_s=tok.compute_s, batch_size=n,
-                             report=tok)
+                             report=tok, stall_s=tok.ssd_stall_s,
+                             overlapped_bytes=self.prefetch.stats
+                             .overlapped_bytes - overlapped0)
         sess.prompt_done += n
         prev = sess.prefill_report
         sess.prefill_report = StepReport(
@@ -416,28 +438,96 @@ class M2CacheEngine:
         self.prefill_chunk(sess)
         return sess
 
+    def _batch_for(self, runner):
+        """Persistent DecodeBatch for one seq-length bucket."""
+        from repro.core.engine_model import DecodeBatch
+        b = self._batches.get(runner.max_seq)
+        if b is None or b.runner is not runner:
+            b = DecodeBatch(runner)
+            self._batches[runner.max_seq] = b
+        return b
+
+    def _union_active(self, rows_per_layer) -> tuple:
+        """Vectorized batch union: per layer, ``rows`` is a (G, k) array of
+        rank-sorted active ids, one row per batch member. Returns
+        (sets, tier_maps) where a neuron's precision tier comes from its
+        rank at its *first* occurrence in row-major order — the same
+        first-seen-wins rule the old per-neuron dict loop applied, now one
+        ``np.unique`` per layer instead of a Python loop over B×L×k ids."""
+        names = ("fp16", "int8", "int4")
+        sets, tiers = [], []
+        for rows in rows_per_layer:
+            rows = np.asarray(rows)
+            if rows.size == 0:
+                sets.append([])
+                tiers.append({})
+                continue
+            G, k = rows.shape
+            ranks = np.arange(k)
+            codes = np.where(ranks < self.sizes["fp16"], 0,
+                             np.where(ranks < self.sizes["fp16"]
+                                      + self.sizes["int8"], 1, 2))
+            uniq, first = np.unique(rows.reshape(-1).astype(np.int64),
+                                    return_index=True)
+            tcode = np.tile(codes, G)[first]
+            sets.append(uniq)
+            tiers.append({int(n): names[c]
+                          for n, c in zip(uniq, tcode)})
+        return sets, tiers
+
     def decode_step(self, sessions: Sequence[DecodeSession]) -> StepReport:
-        """One decode step for a batch of sessions: every session advances
-        one token; weight traffic is charged once for the union of the
-        batch's active sets while compute scales with the batch size.
-        Returns a :class:`StepReport` whose ``modeled_s`` (s) is the clock
-        delta charged for the step and ``compute_s`` (s) the
-        accelerator-busy share; KV growth is *not* included — the
-        scheduler charges it separately via the tiered KV cache."""
+        """One decode step: every session advances one token.
+
+        Execution and pricing follow the *dispatch groups*: with
+        ``batched_decode`` (default), real-tiny sessions sharing a
+        seq-length bucket are packed into one stacked KV cache and advance
+        under a single vmapped jit dispatch — weight traffic is charged
+        once for the group's active-set union while compute scales with
+        the group size. With ``batched_decode=False`` each real session
+        runs (and is priced) as its own single-sequence step — the serial
+        pre-refactor behaviour, where per-session weight traffic thrashes
+        the ATU cache. Analytic sessions always form one modeled batch.
+
+        Returns a :class:`StepReport`: ``modeled_s`` is the step's clock
+        delta, ``compute_s`` the accelerator-busy share,
+        ``jit_dispatches`` the number of decode graphs launched. KV
+        growth is *not* included — the scheduler charges it separately
+        via the tiered KV cache."""
         B = len(sessions)
         assert B >= 1
         if self.mode == "zero_infinity":
             for sess in sessions:
                 sess.tokens.append(None)
             return self._zero_infinity_step(B)
-        union: List[dict] = [dict() for _ in range(self.num_layers)]
-        for sess in sessions:
-            # mode is per session: a real engine can still serve analytic
-            # (prompt-less) requests, whose sessions carry procs, not a
-            # runner
-            if sess.runner is not None:
-                import jax.numpy as jnp
-                from repro.core.engine_model import flatten_active_idx
+        clock0 = self.clock
+        overlapped0 = self.prefetch.stats.overlapped_bytes
+        # mode is per session: a real engine can still serve analytic
+        # (prompt-less) requests, whose sessions carry procs, not a runner
+        real = [s for s in sessions if s.runner is not None]
+        analytic = [s for s in sessions if s.runner is None]
+        dispatches = 0
+        groups: List[tuple] = []        # (rows_per_layer, group size)
+
+        if real and self.batched_decode and self.cfg.family != "audio":
+            from repro.core.engine_model import flatten_active_idx_batched
+            buckets: Dict[int, list] = {}
+            for s in real:
+                buckets.setdefault(id(s.runner), []).append(s)
+            for members in buckets.values():
+                batch = self._batch_for(members[0].runner)
+                batch.sync(members)
+                nxt, aux = batch.step(self.params)
+                dispatches += 1
+                for s in members:
+                    s.tokens.append(int(nxt[s._row]))
+                rows_idx = [s._row for s in members]
+                per_layer = flatten_active_idx_batched(self.cfg, aux)
+                groups.append(([arr[rows_idx] for arr in per_layer],
+                               len(members)))
+        elif real:
+            import jax.numpy as jnp
+            from repro.core.engine_model import flatten_active_idx
+            for sess in real:
                 nxt = jnp.argmax(sess.last, axis=-1).astype(jnp.int32)
                 sess.tokens.append(int(np.asarray(nxt)[0]))
                 if self.cfg.family == "audio":
@@ -448,20 +538,36 @@ class M2CacheEngine:
                     tok = nxt[:, None]
                 sess.last, sess.cache, aux = sess.runner._decode(
                     self.params, sess.cache, tok)
-                per_layer = [np.asarray(a)
-                             for a in flatten_active_idx(self.cfg, aux)]
-            else:
+                dispatches += 1
+                groups.append(([np.asarray(a)[None] for a in
+                                flatten_active_idx(self.cfg, aux)], 1))
+        if analytic:
+            for sess in analytic:
                 sess.tokens.append(None)
-                per_layer = [pr.step() for pr in sess.procs] \
-                    if sess.procs else []
-            for l, a in enumerate(per_layer):
-                tm = _tier_map(a, self.sizes)
-                for nid in a:
-                    union[l].setdefault(int(nid), tm[int(nid)])
-        sets = [list(d) for d in union]
-        rep = self.manager.process_token(sets, union, batch_size=B)
-        return StepReport(modeled_s=rep.modeled_s, compute_s=rep.compute_s,
-                          batch_size=B, report=rep)
+            rows = [[pr.step() for pr in s.procs]
+                    for s in analytic if s.procs]
+            if rows:
+                per_layer = [np.stack([r[l] for r in rows])
+                             for l in range(self.num_layers)]
+            else:
+                per_layer = [np.zeros((0, 0), np.int64)] * self.num_layers
+            groups.append((per_layer, len(analytic)))
+
+        t_compute = stall = 0.0
+        last_report = None
+        for rows_per_layer, gsize in groups:
+            sets, tiers = self._union_active(rows_per_layer)
+            rep = self.manager.process_token(sets, tiers, batch_size=gsize)
+            t_compute += rep.compute_s
+            stall += rep.ssd_stall_s
+            last_report = rep
+        self.decode_dispatches += dispatches
+        return StepReport(
+            modeled_s=self.clock - clock0, compute_s=t_compute,
+            batch_size=B, report=last_report, jit_dispatches=dispatches,
+            stall_s=stall,
+            overlapped_bytes=self.prefetch.stats.overlapped_bytes
+            - overlapped0)
 
     # ------------------------------------------------------------------
     def generate(self, prompts=None, gen_len: int = 32,

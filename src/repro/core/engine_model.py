@@ -3,11 +3,21 @@
 ``RealModelRunner`` drives jit'd prefill/decode with the in-graph
 MP-Inference path and surfaces per-layer active-neuron indices so the
 multi-level cache manager replays *actual* predictor behaviour.
+
+``DecodeBatch`` is the batched decode path: sessions in the same
+seq-length bucket share one stacked KV cache (leading row axis) and one
+vmapped jit'd decode graph, so a continuous batch of B requests costs one
+dispatch per step instead of B. Rows are packed/unpacked with jit'd
+scatter/gather helpers, so requests joining or leaving the batch never
+retrace — only growing the row capacity (powers of two) does. vmap keeps
+each row's computation — predictor top-k, active set, argmax — identical
+to the per-session graph, which is what makes batched decode emit
+byte-identical tokens.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +45,43 @@ def flatten_active_idx(cfg, aux_idx) -> List[np.ndarray]:
     return out
 
 
+def flatten_active_idx_batched(cfg, aux_idx) -> List[np.ndarray]:
+    """Vmapped aux['active_idx'] -> per-layer (C, k) row-major arrays.
+
+    The batched decode graph stacks every per-row quantity on a leading
+    row axis C; pattern entries arrive as (C, F, k), remainder as (C, k).
+    Layers without M2 FFNs yield (C, 0) arrays.
+    """
+    pat, F, rem = T.pattern_split(cfg)
+    out: List[np.ndarray] = []
+    pattern = [np.asarray(a) for a in aux_idx["pattern"]]
+    for r in range(F):
+        for p in range(len(pat)):
+            arr = pattern[p]
+            out.append(arr[:, r] if arr.size else
+                       np.zeros((arr.shape[0], 0), np.int32))
+    for a in aux_idx["remainder"]:
+        a = np.asarray(a)
+        out.append(a if a.size else np.zeros((a.shape[0], 0), np.int32))
+    return out
+
+
+# --- jit'd pack/unpack helpers (row scatter/gather over a cache pytree).
+# The row index is a traced argument, so membership churn in the
+# continuous batch re-uses one compiled graph per pytree structure.
+
+
+@jax.jit
+def _scatter_row(stack, row, i):
+    return jax.tree.map(lambda s, r: s.at[i].set(r.astype(s.dtype)),
+                        stack, row)
+
+
+@jax.jit
+def _gather_row(stack, i):
+    return jax.tree.map(lambda s: s[i], stack)
+
+
 class RealModelRunner:
     def __init__(self, cfg, params, *, max_seq: int, dtype=jnp.float32):
         self.cfg = cfg
@@ -54,8 +101,21 @@ class RealModelRunner:
                                            mode="decode", m2=True)
             return logits[..., 0, :], cache, aux["active_idx"]
 
+        def decode_one_row(params, cache, last):
+            # one batch row: greedy token from the row's last logits, then
+            # one decode step. Identical per-row math to `decode` (B=1),
+            # so vmapping it preserves per-session numerics exactly.
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            tok = nxt[None, None]                       # (1, 1)
+            logits, cache, aux = T.forward(cfg, params, tok, cache=cache,
+                                           mode="decode", m2=True)
+            return logits[0, -1, :], cache, nxt, aux["active_idx"]
+
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode)
+        # one dispatch advances every row of a stacked decode batch
+        self._decode_batched = jax.jit(
+            jax.vmap(decode_one_row, in_axes=(None, 0, 0)))
 
     def generate(self, prompts, gen_len: int
                  ) -> Tuple[np.ndarray, List[List[np.ndarray]]]:
@@ -75,6 +135,113 @@ class RealModelRunner:
             last, cache, aux_idx = self._decode(self.params, cache, tok)
             idx_steps.append(flatten_active_idx(self.cfg, aux_idx))
         return np.stack(outs, axis=-1), idx_steps
+
+
+class DecodeBatch:
+    """Persistent stacked decode state for one seq-length bucket.
+
+    Sessions join by scattering their per-session KV cache and last-token
+    logits into a free row of the stacked pytree; they leave by gathering
+    the row back out (so a preempted session resumes from exactly the
+    state it left with). The row capacity is padded to a power of two:
+    membership churn between 1 and ``capacity`` rows re-uses one traced
+    graph, and only a capacity doubling retraces. Unoccupied rows decode
+    garbage that nobody reads — modeled cost is charged for *members*
+    only, by the engine.
+    """
+
+    def __init__(self, runner: "RealModelRunner"):
+        self.runner = runner
+        self.capacity = 0
+        self.rows: List[Optional[object]] = []     # row -> DecodeSession
+        self.stack = None                          # stacked cache pytree
+        self.last = None                           # (C, V) last logits
+
+    @property
+    def members(self) -> List[object]:
+        return [s for s in self.rows if s is not None]
+
+    def _ensure_capacity(self, n: int):
+        cap = 1
+        while cap < n:
+            cap *= 2
+        if cap <= self.capacity:
+            return
+        if self.stack is None:
+            # template from any session is scattered right after; zeros
+            # here only fix shapes/dtypes
+            cache = T.init_cache(self.runner.cfg, 1,
+                                 max_seq=self.runner.max_seq,
+                                 dtype=self.runner.dtype)
+            self.stack = jax.tree.map(
+                lambda x: jnp.zeros((cap,) + x.shape, x.dtype), cache)
+            vocab = self.runner.cfg.vocab_size
+            self.last = jnp.zeros((cap, vocab), jnp.float32)
+        else:
+            pad = cap - self.capacity
+            self.stack = jax.tree.map(
+                lambda s: jnp.concatenate(
+                    [s, jnp.zeros((pad,) + s.shape[1:], s.dtype)]),
+                self.stack)
+            self.last = jnp.concatenate(
+                [self.last, jnp.zeros((pad,) + self.last.shape[1:],
+                                      self.last.dtype)])
+        self.rows.extend([None] * (cap - self.capacity))
+        self.capacity = cap
+
+    def join(self, sess):
+        """Pack one prefilled session into a free row (scatter)."""
+        if sess._batch is self:
+            return
+        assert sess._batch is None, "session already in another batch"
+        try:
+            i = self.rows.index(None)
+        except ValueError:
+            self._ensure_capacity(self.capacity + 1)
+            i = self.rows.index(None)
+        self.stack = _scatter_row(self.stack, sess.cache, i)
+        self.last = self.last.at[i].set(
+            sess.last[0].astype(self.last.dtype))
+        # the row is now the live state: drop the per-session copies so a
+        # batch member neither doubles its KV footprint nor exposes stale
+        # pre-join state (evict() restores both from the row)
+        sess.cache = None
+        sess.last = None
+        self.rows[i] = sess
+        sess._batch = self
+        sess._row = i
+
+    def evict(self, sess):
+        """Unpack one session's row back into the session (gather), so a
+        preempted request can later resume — possibly in another row."""
+        assert sess._batch is self
+        i = sess._row
+        sess.cache = _gather_row(self.stack, i)
+        sess.last = self.last[i][None]
+        self.rows[i] = None
+        sess._batch = None
+        sess._row = -1
+
+    def sync(self, members: List[object]):
+        """Reconcile rows with this step's decode set: sessions that left
+        the continuous batch (finished/preempted) are gathered out first,
+        then joiners are scattered in — eager eviction keeps a leaver's
+        row from being stepped (and corrupted) after its departure."""
+        present = {id(s) for s in members}
+        for s in list(self.rows):
+            if s is not None and id(s) not in present:
+                self.evict(s)
+        n = sum(1 for s in members if s._batch is not self)
+        self._ensure_capacity(len(self.members) + n)
+        for s in members:
+            self.join(s)
+
+    def step(self, params) -> Tuple[np.ndarray, dict]:
+        """One vmapped decode dispatch for every row. Returns the (C,)
+        greedy tokens the step consumed and the stacked active-idx aux."""
+        self.last, self.stack, nxt, aux = self.runner._decode_batched(
+            params, self.stack, self.last)
+        return np.asarray(nxt), aux
 
 
 def extract_layer_banks(cfg, params) -> List[dict]:

@@ -23,6 +23,11 @@ class HostHW:
     # effective fraction of PCIe bandwidth for scattered neuron-sized
     # (≈13–40 KB) DRAM→HBM transfers (paper Fig. 5's small-copy penalty)
     pcie_scatter_eff: float = 0.25
+    # per-kernel launch latency: every separately-dispatched decode graph
+    # pays this once per layer, so B per-session dispatches cost B× what
+    # one batched dispatch does (same constant the per-copy HBM-transfer
+    # overhead above uses)
+    kernel_launch_s: float = 5e-6
 
 
 @dataclasses.dataclass(frozen=True)

@@ -40,7 +40,8 @@ def build_engine(args) -> M2CacheEngine:
         return M2CacheEngine(paper_model=args.paper_model, mode=args.mode,
                              hbm_policy=args.hbm_policy,
                              use_ssd=not args.no_ssd,
-                             dram_capacity_gb=args.dram_gb, seed=args.seed)
+                             dram_capacity_gb=args.dram_gb, seed=args.seed,
+                             batched_decode=not args.no_batched_decode)
     import jax
     import jax.numpy as jnp
     from repro.configs.base import get_config
@@ -51,7 +52,8 @@ def build_engine(args) -> M2CacheEngine:
     return M2CacheEngine(cfg=cfg, params=params, mode=args.mode,
                          hbm_policy=args.hbm_policy,
                          use_ssd=not args.no_ssd,
-                         dram_capacity_gb=args.dram_gb, seed=args.seed)
+                         dram_capacity_gb=args.dram_gb, seed=args.seed,
+                         batched_decode=not args.no_batched_decode)
 
 
 def build_trace(args):
@@ -133,6 +135,12 @@ def main():
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--hbm-kv-gb", type=float, default=0.5)
     ap.add_argument("--dram-kv-gb", type=float, default=1.0)
+    ap.add_argument("--no-batched-decode", action="store_true",
+                    help="legacy one-jit-dispatch-per-session real decode "
+                         "(serially priced)")
+    ap.add_argument("--no-kv-prefetch", action="store_true",
+                    help="disable predictive KV promotion; every resume "
+                         "pays the serial swap-in")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -148,7 +156,8 @@ def main():
                                      dram_kv_gb=args.dram_kv_gb,
                                      policy=policy,
                                      prefill_chunk=args.prefill_chunk,
-                                     carbon_trace=carbon_trace)
+                                     carbon_trace=carbon_trace,
+                                     kv_prefetch=not args.no_kv_prefetch)
     rep = sched.run(reqs)
     print(json.dumps({
         "summary": rep.summary(),

@@ -23,17 +23,27 @@ via ``M2CacheEngine.advance_clock`` — the cache never advances a clock
 itself. Capacities and ``stats()`` byte counters are **real (unscaled)
 bytes**; on-disk surrogate files are smaller by ``byte_scale``. ``tokens``
 counts prompt + generated tokens currently stored per request.
+
+**Async prefetch**: with a shared :class:`PrefetchEngine` attached, the
+scheduler can call :meth:`prefetch_resident` for requests it predicts
+will join the next decode batch — block promotions are then *issued* on
+the modeled SSD/PCIe channels (contending with the weight preloader on
+the same flash bus) and overlap with the current step's compute.
+A later ``ensure_resident(..., now=clock)`` charges only the residual
+stall of still-in-flight transfers instead of the full serial swap time.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 from collections import OrderedDict
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
 from repro.core.cache.dram_cache import DRAMCache
+from repro.core.cache.preloader import (PCIE_CHANNEL, SSD_CHANNEL,
+                                        PrefetchEngine)
 from repro.core.cache.ssd_tier import SSDTier
 from repro.core.hw import HOST, HostHW
 
@@ -51,8 +61,14 @@ class TieredKVCache:
                  hbm_capacity_bytes: float, dram_capacity_bytes: float,
                  ssd_dir: str, hw: HostHW = HOST, block_tokens: int = 16,
                  bytes_per_token: float = None,
-                 max_file_bytes: int = 65536):
+                 max_file_bytes: int = 65536,
+                 prefetch: Optional[PrefetchEngine] = None):
         self.hw = hw
+        # shared modeled DMA engine (None -> all swaps priced serially)
+        self.prefetch = prefetch
+        if prefetch is not None:
+            prefetch.add_channel(SSD_CHANNEL, hw.ssd_bw)
+            prefetch.add_channel(PCIE_CHANNEL, hw.pcie_bw)
         self.block_tokens = block_tokens
         self.bytes_per_token = bytes_per_token if bytes_per_token \
             else 2.0 * num_layers * d_model * 2.0          # fp16 K+V
@@ -78,6 +94,11 @@ class TieredKVCache:
         self.swap_in_bytes = 0.0
         self.swap_s = 0.0
         self.preempt_swaps = 0
+        # prefetch accounting (real bytes / modeled seconds)
+        self.prefetch_issued_bytes = 0.0
+        self.prefetch_overlap_bytes = 0.0
+        self.prefetch_stall_s = 0.0
+        self.resume_sync_s = 0.0         # serial (unprefetched) promotions
 
     # ------------------------------------------------------------------
     def _payload(self) -> dict:
@@ -115,6 +136,9 @@ class TieredKVCache:
         blk = self.blocks[bid]
         assert blk.tier == "hbm"
         dt = self._spill_dram_to_ssd(blk.nbytes)
+        if self.prefetch is not None:
+            # an unconsumed in-flight prefetch dies with the eviction
+            self.prefetch.cancel(("kv", bid))
         self._hbm_lru.pop(bid, None)
         self.hbm_used -= blk.nbytes
         self.dram.insert(bid, self._payload())
@@ -153,6 +177,35 @@ class TieredKVCache:
         self.hbm_used += blk.nbytes
         self.swap_in_bytes += blk.nbytes
         return dt
+
+    def _promote_async(self, bid: int, now: float) -> bool:
+        """Opportunistic DRAM/SSD → HBM promotion on the modeled DMA
+        channels: the block becomes HBM-resident immediately, its arrival
+        time tracked under key ``("kv", bid)`` for
+        :meth:`ensure_resident` to wait on. Prefetch never evicts — it
+        only fills free HBM headroom, so it cannot displace running
+        requests' KV or trigger preemptions; returns False when the block
+        does not fit right now."""
+        blk = self.blocks[bid]
+        if self.hbm_used + blk.nbytes > self.hbm_capacity:
+            return False
+        not_before = 0.0
+        if blk.tier == "dram":
+            self.dram.drop(bid)
+        elif blk.tier == "ssd":
+            self.ssd.read_layer(bid)               # real flash read
+            self.ssd.delete_layer(bid, flush_meta=False)
+            key = ("kv_ssd", bid)
+            not_before = self.prefetch.issue(SSD_CHANNEL, key, blk.nbytes,
+                                             now)
+            self.prefetch.cancel(key)              # waiters watch the PCIe leg
+        self.prefetch.issue(PCIE_CHANNEL, ("kv", bid), blk.nbytes, now,
+                            not_before=not_before)
+        blk.tier = "hbm"
+        self._hbm_lru[bid] = None
+        self.hbm_used += blk.nbytes
+        self.swap_in_bytes += blk.nbytes
+        return True
 
     def _new_block(self, rid: int, protect: Iterable[int]) -> float:
         dt = self._evict_for(self.block_bytes, protect)
@@ -203,13 +256,48 @@ class TieredKVCache:
             if bid in self._hbm_lru:
                 self._hbm_lru.move_to_end(bid)
 
-    def ensure_resident(self, rid: int,
-                        protect: Iterable[int] = ()) -> float:
-        """Swap a (possibly preempted) request's blocks back into HBM."""
+    def prefetch_resident(self, rid: int, *, now: float) -> float:
+        """Predictively promote a request's blocks toward HBM in the
+        background, starting at modeled time ``now`` (the scheduler calls
+        this for requests it expects in the *next* decode batch, so the
+        transfers overlap the current step's compute). Only free HBM
+        headroom is filled — prefetch never evicts. Returns the real
+        bytes issued; nothing is charged to the clock here."""
+        if self.prefetch is None:
+            return 0.0
+        issued = 0.0
+        for bid in self.table.get(rid, []):
+            blk = self.blocks[bid]
+            if blk.tier == "hbm":
+                continue
+            if self._promote_async(bid, now):
+                issued += blk.nbytes
+        self.prefetch_issued_bytes += issued
+        return issued
+
+    def ensure_resident(self, rid: int, protect: Iterable[int] = (), *,
+                        now: Optional[float] = None) -> float:
+        """Swap a (possibly preempted) request's blocks back into HBM.
+
+        Blocks promoted ahead of time by :meth:`prefetch_resident` charge
+        only the residual stall of their in-flight transfer at modeled
+        time ``now`` (zero once it landed); the rest pay the serial
+        promotion path as before."""
         dt = 0.0
         for bid in self.table.get(rid, []):
-            if self.blocks[bid].tier != "hbm":
-                dt += self._promote(bid, protect)
+            blk = self.blocks[bid]
+            if blk.tier != "hbm":
+                sync = self._promote(bid, protect)
+                self.resume_sync_s += sync
+                dt += sync
+            elif self.prefetch is not None and now is not None \
+                    and self.prefetch.in_flight(("kv", bid)):
+                stall = self.prefetch.wait(("kv", bid), now + dt)
+                if stall > 0.0:
+                    self.prefetch_stall_s += stall
+                else:
+                    self.prefetch_overlap_bytes += blk.nbytes
+                dt += stall
         self.touch(rid)
         return self._charge(dt)
 
@@ -226,6 +314,8 @@ class TieredKVCache:
         """Release a finished request's blocks from every tier."""
         for bid in self.table.pop(rid, []):
             blk = self.blocks.pop(bid)
+            if self.prefetch is not None:
+                self.prefetch.cancel(("kv", bid))
             if blk.tier == "hbm":
                 self._hbm_lru.pop(bid, None)
                 self.hbm_used -= blk.nbytes
@@ -260,4 +350,10 @@ class TieredKVCache:
             "kv_ssd_read_bytes": self.ssd.bytes_read * self.byte_scale,
             "kv_swap_s": self.swap_s,
             "kv_preempt_swaps": self.preempt_swaps,
+            "kv_prefetch_issued_bytes": self.prefetch_issued_bytes,
+            "kv_prefetch_overlap_bytes": self.prefetch_overlap_bytes,
+            "kv_prefetch_stall_s": self.prefetch_stall_s,
+            "kv_resume_sync_s": self.resume_sync_s,
+            # clock seconds paid waiting on KV residency, prefetched or not
+            "kv_stall_s": self.resume_sync_s + self.prefetch_stall_s,
         }

@@ -114,6 +114,9 @@ class ServingReport:
     policy: str = "fcfs"
     prefill_chunks: int = 0
     mid_prefill_preemptions: int = 0
+    jit_dispatches: int = 0             # real decode graphs launched
+    stall_s: float = 0.0                # weight SSD + KV residency stalls
+    overlapped_bytes: float = 0.0       # prefetched bytes that hid in time
 
     @property
     def tokens_per_s(self) -> float:
@@ -172,6 +175,10 @@ class ServingReport:
             "preemptions": self.preemptions,
             "gco2_per_request": self.carbon["total_g"] / n,
             "gco2_total": self.carbon["total_g"],
+            "jit_dispatches_per_step":
+                self.jit_dispatches / max(self.decode_steps, 1),
+            "stall_s": self.stall_s,
+            "overlapped_bytes": self.overlapped_bytes,
         }
         out.update(self.slo_summary())
         if "mean_intensity_g_kwh" in self.carbon:
@@ -199,7 +206,8 @@ class ContinuousBatchScheduler:
                  policy: Optional[SchedulingPolicy] = None,
                  prefill_chunk: Optional[int] = None,
                  carbon_trace: Optional[
-                     carbon_mod.CarbonIntensityTrace] = None):
+                     carbon_mod.CarbonIntensityTrace] = None,
+                 kv_prefetch: bool = True):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if prefill_chunk is not None and prefill_chunk < 1:
@@ -213,8 +221,12 @@ class ContinuousBatchScheduler:
                 hbm_capacity_bytes=hbm_kv_gb * 2**30,
                 dram_capacity_bytes=dram_kv_gb * 2**30,
                 ssd_dir=os.path.join(engine._ssd_dir, "kv"), hw=engine.hw,
-                bytes_per_token=engine.kv_bytes_per_token())
+                bytes_per_token=engine.kv_bytes_per_token(),
+                prefetch=engine.prefetch if kv_prefetch else None)
         self.kv = kv
+        # predictive KV promotion only works when the cache carries the
+        # shared DMA engine (a caller-supplied kv may not)
+        self.kv_prefetch = kv_prefetch and kv.prefetch is not None
         self.max_batch = max_batch
         self.policy = policy or FCFSPolicy()
         self.prefill_chunk = prefill_chunk
@@ -234,8 +246,11 @@ class ContinuousBatchScheduler:
         eng, kv = self.engine, self.kv
         protect = [r.rid for r in active] + [req.rid]
         if req.state is RequestState.PREEMPTED:
-            # resume: KV swaps back in; prefill continues where it stopped
-            eng.advance_clock(kv.ensure_resident(req.rid, protect))
+            # resume: KV swaps back in (or, if prefetched ahead, pays only
+            # the residual in-flight stall); prefill continues where it
+            # stopped
+            eng.advance_clock(
+                kv.ensure_resident(req.rid, protect, now=eng.clock))
         else:
             req.session = eng.begin_prefill(
                 req.prompt, rid=req.rid, prompt_len=req.prompt_len,
@@ -247,9 +262,10 @@ class ContinuousBatchScheduler:
 
     def _prefill_step(self, active: List[ServingRequest]) -> tuple:
         """One prefill chunk for every PREFILLING request; returns
-        (compute seconds, chunks charged)."""
+        (compute seconds, chunks charged, stall seconds, overlapped
+        bytes)."""
         eng, kv = self.engine, self.kv
-        compute_s, chunks = 0.0, 0
+        compute_s, chunks, stall_s, overlapped = 0.0, 0, 0.0, 0.0
         protect = [r.rid for r in active]
         for r in active:
             if r.state is not RequestState.PREFILLING:
@@ -258,10 +274,34 @@ class ContinuousBatchScheduler:
             eng.advance_clock(kv.extend(r.rid, rep.batch_size, protect))
             r.prompt_done = r.session.prompt_done
             compute_s += rep.compute_s
+            stall_s += rep.stall_s
+            overlapped += rep.overlapped_bytes
             chunks += 1
             if r.prefilled:
                 r.state = RequestState.RUNNING
-        return compute_s, chunks
+        return compute_s, chunks, stall_s, overlapped
+
+    def _prefetch_ahead(self, waiting: List[ServingRequest], now: float):
+        """Predict the next step's resident set and start promoting it.
+
+        The requests the policy would admit next are the prediction;
+        preempted ones among them have KV parked in DRAM/SSD, so their
+        blocks are issued on the shared DMA channels *now* — overlapping
+        the decode step that is about to run — and the eventual
+        ``ensure_resident`` at admission hits warm HBM instead of
+        stalling the clock. Promotion is opportunistic (free headroom
+        only), so a wrong prediction wastes bus time but never displaces
+        running requests' KV; in particular a request waiting on a batch
+        *slot* (not on KV space, e.g. under the paper's §5.5.2 batch cap)
+        warms up entirely for free."""
+        if not self.kv_prefetch or not waiting:
+            return
+        for req in self.policy.admission_order(waiting,
+                                               now)[:self.max_batch]:
+            if not self.policy.may_start(req, now):
+                continue
+            if req.state is RequestState.PREEMPTED:
+                self.kv.prefetch_resident(req.rid, now=self.engine.clock)
 
     def _preempt(self, active: List[ServingRequest],
                  waiting: List[ServingRequest]) -> tuple:
@@ -311,6 +351,9 @@ class ContinuousBatchScheduler:
         preemptions = 0
         mid_prefill_preemptions = 0
         prefill_chunks = 0
+        jit_dispatches = 0
+        stall_s = 0.0
+        overlapped = 0.0
 
         while i < len(pending) or waiting or active:
             iter_clock0 = eng.clock
@@ -352,17 +395,25 @@ class ContinuousBatchScheduler:
                 self._admit(req, active)
             # one prefill chunk per prefilling request, then resolve KV
             # pressure (possibly preempting mid-prefill), then decode
-            comp, chunks = self._prefill_step(active)
+            comp, chunks, pf_stall, pf_overlap = self._prefill_step(active)
             iter_compute += comp
             prefill_chunks += chunks
+            stall_s += pf_stall
+            overlapped += pf_overlap
             n, mid = self._preempt(active, waiting)
             preemptions += n
             mid_prefill_preemptions += mid
             running = [r for r in active if r.state is RequestState.RUNNING]
+            # issue next step's predicted KV promotions before decoding so
+            # the transfers overlap this step's compute on the DMA clock
+            self._prefetch_ahead(waiting, eng.clock - clock_start)
             if running:
                 rep = eng.decode_step([r.session for r in running])
                 iter_compute += rep.compute_s
                 decode_steps += 1
+                jit_dispatches += rep.jit_dispatches
+                stall_s += rep.stall_s
+                overlapped += rep.overlapped_bytes
                 for r in running:
                     kv.touch(r.rid)
                     eng.advance_clock(
@@ -391,16 +442,24 @@ class ContinuousBatchScheduler:
         carbon = accountant.totals()
         cache_stats = {}
         if eng.manager:
+            pre = eng.manager.preloader.stats
             cache_stats = {
                 "hbm_hit_ratio": eng.manager.hbm.hit_ratio,
                 "dram_hit_ratio": eng.manager.dram.hit_ratio,
                 "ssd_bytes_read": int(eng.ssd.bytes_read
                                       * eng._file_byte_scale),
+                "weight_preload_stall_s": pre.stall_s,
+                "weight_overlapped_bytes": pre.overlapped_bytes,
             }
+        kv_stats = kv.stats()
         return ServingReport(
             requests=finished, modeled_span_s=span,
             total_tokens=total_tokens, decode_steps=decode_steps,
-            preemptions=preemptions, kv_stats=kv.stats(),
+            preemptions=preemptions, kv_stats=kv_stats,
             cache_stats=cache_stats, carbon=carbon,
             policy=self.policy.name, prefill_chunks=prefill_chunks,
-            mid_prefill_preemptions=mid_prefill_preemptions)
+            mid_prefill_preemptions=mid_prefill_preemptions,
+            jit_dispatches=jit_dispatches,
+            stall_s=stall_s + kv_stats["kv_stall_s"],
+            overlapped_bytes=overlapped
+            + kv_stats["kv_prefetch_overlap_bytes"])

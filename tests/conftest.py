@@ -7,6 +7,16 @@ import numpy as np
 import pytest
 
 
+#: skip-on-CPU marker for tests that need a real accelerator backend
+#: (Pallas lowering, HLO cost models, multi-device topologies) — the
+#: pre-existing seed failures on this CPU-only container, per
+#: docs/LIMITATIONS.md. On GPU/TPU hosts these tests run normally.
+needs_accelerator = pytest.mark.skipif(
+    jax.devices()[0].platform == "cpu",
+    reason="needs a GPU/TPU XLA backend; fails on the CPU-only container "
+           "(docs/LIMITATIONS.md)")
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

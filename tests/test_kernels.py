@@ -12,6 +12,11 @@ from repro.kernels.flash_decode import flash_decode
 from repro.kernels.ops import make_compact_banks, mp_glu_ffn
 from repro.kernels.qmatmul import qmatmul
 
+# The Pallas matmul/attention sweeps hit interpret-mode lowering and
+# tolerance gaps without a real backend; the ATU-update kernel sweeps
+# interpret fine and stay unguarded.
+from conftest import needs_accelerator
+
 
 @pytest.mark.parametrize("B,K,N,bk,bn", [
     (1, 256, 128, 128, 128),
@@ -19,6 +24,7 @@ from repro.kernels.qmatmul import qmatmul
     (8, 256, 512, 128, 256),
     (3, 384, 384, 128, 128),
 ])
+@needs_accelerator
 @pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
 def test_qmatmul_fp_sweep(B, K, N, bk, bn, xdtype, key):
     ks = jax.random.split(key, 2)
@@ -32,6 +38,7 @@ def test_qmatmul_fp_sweep(B, K, N, bk, bn, xdtype, key):
                                atol=tol, rtol=tol)
 
 
+@needs_accelerator
 @pytest.mark.parametrize("B,K,N", [(2, 256, 128), (4, 512, 512)])
 @pytest.mark.parametrize("precision", ["int8", "int4"])
 def test_qmatmul_quantized_sweep(B, K, N, precision, key):
@@ -59,6 +66,7 @@ def test_qmatmul_quantized_sweep(B, K, N, precision, key):
     (2, 2, 4, 64, 1024, 256),
     (2, 4, 5, 32, 512, 512),   # odd G (qwen-style 40/8)
 ])
+@needs_accelerator
 def test_flash_decode_sweep(B, Hkv, G, D, S, bs, key):
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, Hkv, G, D), jnp.float32)
@@ -72,6 +80,7 @@ def test_flash_decode_sweep(B, Hkv, G, D, S, bs, key):
                                atol=1e-5, rtol=1e-5)
 
 
+@needs_accelerator
 def test_flash_decode_ring_buffer_positions(key):
     """Ring-buffer slot positions (wrap-around) mask correctly."""
     B, Hkv, G, D, S = 1, 1, 2, 32, 256
@@ -121,6 +130,7 @@ def test_atu_update_preserves_untouched_slots(key):
     np.testing.assert_allclose(np.asarray(u[:, 8:16]), np.asarray(bank[:, :8]))
 
 
+@needs_accelerator
 @pytest.mark.parametrize("act", ["silu", "gelu", "relu"])
 def test_mp_glu_ffn_composed(act, key):
     dm, ff = 256, 512
@@ -151,6 +161,7 @@ def test_mp_glu_ffn_composed(act, key):
     (1, 256, 5, 1, 32, 0, 64, 128),      # MQA, odd G
     (1, 128, 4, 4, 64, 0, 128, 32),      # MHA, uneven tiles
 ])
+@needs_accelerator
 def test_flash_attention_sweep(B, S, Hq, Hkv, D, w, bq, bk, key):
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.ref import flash_attention_ref
@@ -164,6 +175,7 @@ def test_flash_attention_sweep(B, S, Hq, Hkv, D, w, bq, bk, key):
                                atol=2e-5, rtol=2e-5)
 
 
+@needs_accelerator
 def test_flash_attention_matches_model_chunked_attention(key):
     """The Pallas kernel and the model's XLA-level chunked attention are the
     same mathematical function."""
