@@ -1,0 +1,190 @@
+"""Radix prefix cache + batched prefill benchmark.
+
+Serves a closed burst of chat-style shared-prefix requests (real tiny
+model: actual jit'd prefill/decode, modeled transfer clock) through
+three systems:
+
+  no-reuse       — every prompt recomputed from scratch, one jit prefill
+                   graph per session (the pre-refactor serving loop);
+  radix          — the prefix cache on: prompts are looked up in the
+                   radix tree at admission, hit prefixes are served from
+                   the tiered KV hierarchy (residency transfers charged
+                   instead of prefill compute) and finished prefills
+                   donate their prompt blocks back; prefill still runs
+                   one graph per session;
+  radix+batched  — plus the batched prefill graph: same-width prompts
+                   entering prefill together run as one stacked vmapped
+                   dispatch, and an iteration's concurrent chunks are
+                   priced as one dispatch group.
+
+Each system runs the trace twice through one scheduler: the first pass
+populates the tree (every prompt is new), the second measures the
+steady state every chat product lives in (hot system prompts + re-sent
+histories). Tokens must be byte-identical across all three systems and
+both passes — the prefix cache moves modeled cost, never numerics.
+
+Emits ``BENCH_prefix.json`` next to this file (same pattern as
+``BENCH_serving.json``) so the perf trajectory is tracked across PRs.
+
+  PYTHONPATH=src python benchmarks/serving_prefix.py [--requests 10]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+from repro.core.engine import M2CacheEngine
+from repro.serving import (ContinuousBatchScheduler, requests_from_trace,
+                           shared_prefix_trace)
+
+
+def build_events(args, cfg):
+    events = shared_prefix_trace(
+        args.requests, rate_rps=1e6, num_groups=args.prefix_groups,
+        prefix_len=args.prefix_len, reuse_ratio=args.reuse,
+        turns=args.turns, suffix_len=(3, 6),
+        gen_len=(args.gen_len - 2, args.gen_len + 1),
+        vocab_size=cfg.vocab_size, seed=args.seed)
+    # closed burst: maximum batching pressure, spans compute-dominated
+    return [dataclasses.replace(e, arrival_s=0.0) for e in events]
+
+
+def run_system(name, args, cfg, params, events, *, prefix, bucket):
+    eng = M2CacheEngine(cfg=cfg, params=params,
+                        dram_capacity_gb=args.dram_gb,
+                        prefill_bucket=bucket, seed=args.seed)
+    sched = ContinuousBatchScheduler(
+        eng, max_batch=args.max_batch, prefill_chunk=args.prefill_chunk,
+        hbm_kv_gb=args.hbm_kv_gb, dram_kv_gb=args.dram_kv_gb,
+        prefix_caching=prefix)
+    passes = []
+    for _ in range(2):                     # pass 1 warms, pass 2 measures
+        rep = sched.run(requests_from_trace(events,
+                                            vocab_size=cfg.vocab_size))
+        s = rep.summary()
+        pstats = rep.prefix_stats          # per-run deltas already
+        hit_rate = pstats.get("prefix_hit_rate", 0.0)
+        passes.append({
+            "tokens_per_s": s["tokens_per_s"],
+            "modeled_span_s": rep.modeled_span_s,
+            "p50_ttft_s": s["p50_ttft_s"],
+            "gco2_per_request": s["gco2_per_request"],
+            "prefill_steps": rep.prefill_steps,
+            "prefill_chunks": rep.prefill_chunks,
+            "prefill_dispatches": rep.prefill_dispatches,
+            "prefill_dispatches_per_step":
+                s["prefill_dispatches_per_step"],
+            "prefix_hit_rate": hit_rate,
+            "prefix_hit_tokens": pstats.get("prefix_hit_tokens", 0),
+            "prefill_flops_saved":
+                pstats.get("prefix_hit_tokens", 0) * eng.num_layers
+                * eng._layer_flops_sparse(),
+            "tokens": {r.rid: list(r.session.tokens)
+                       for r in rep.requests},
+        })
+    warm, steady = passes
+    print(f"{name:14s} tok/s={steady['tokens_per_s']:9.0f} "
+          f"ttft={steady['p50_ttft_s'] * 1e3:7.3f}ms "
+          f"gCO2/req={steady['gco2_per_request']:.2e} "
+          f"hit={steady['prefix_hit_rate']:4.2f} "
+          f"disp/step={steady['prefill_dispatches_per_step']:4.2f} "
+          f"flops_saved={steady['prefill_flops_saved']:.2e}")
+    return {"warm": warm, "steady": steady}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prefix-groups", type=int, default=2)
+    ap.add_argument("--prefix-len", type=int, default=40,
+                    help="shared system-prompt tokens per group")
+    ap.add_argument("--reuse", type=float, default=0.8,
+                    help="fraction of conversations on a shared prefix")
+    ap.add_argument("--turns", type=int, default=1)
+    ap.add_argument("--gen-len", type=int, default=7)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--prefill-bucket", type=int, default=8)
+    ap.add_argument("--dram-gb", type=float, default=0.5)
+    ap.add_argument("--hbm-kv-gb", type=float, default=0.25)
+    ap.add_argument("--dram-kv-gb", type=float, default=1.0)
+    ap.add_argument("--min-speedup", type=float, default=1.3,
+                    help="required steady-state radix/no-reuse tok/s")
+    ap.add_argument("--min-hit-rate", type=float, default=0.4,
+                    help="required steady-state prefix token hit rate")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_prefix.json "
+                         "next to this script)")
+    args = ap.parse_args()
+    if args.requests < 8:
+        ap.error("acceptance regime is >= 8 concurrent requests")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config(args.arch, tiny=True)
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg,
+                           dtype=jnp.float32, m2=True)
+    events = build_events(args, cfg)
+
+    rows = {
+        "no-reuse": run_system("no-reuse", args, cfg, params, events,
+                               prefix=False, bucket=1),
+        "radix": run_system("radix", args, cfg, params, events,
+                            prefix=True, bucket=1),
+        "radix+batched": run_system("radix+batched", args, cfg, params,
+                                    events, prefix=True,
+                                    bucket=args.prefill_bucket),
+    }
+
+    base, radix, both = (rows["no-reuse"], rows["radix"],
+                         rows["radix+batched"])
+    speedup = radix["steady"]["tokens_per_s"] \
+        / max(base["steady"]["tokens_per_s"], 1e-12)
+    toks = [{p: {k: v for k, v in r[p]["tokens"].items()}
+             for p in ("warm", "steady")} for r in rows.values()]
+    checks = {
+        "tokens_identical": toks[0] == toks[1] == toks[2],
+        "radix_speedup": speedup,
+        "radix_speedup_ok": speedup >= args.min_speedup,
+        "gco2_per_request_lower":
+            radix["steady"]["gco2_per_request"]
+            < base["steady"]["gco2_per_request"],
+        "hit_rate": radix["steady"]["prefix_hit_rate"],
+        "hit_rate_ok":
+            radix["steady"]["prefix_hit_rate"] >= args.min_hit_rate,
+        "ttft_improved": radix["steady"]["p50_ttft_s"]
+        < base["steady"]["p50_ttft_s"],
+        "prefill_flops_saved_nonzero":
+            radix["steady"]["prefill_flops_saved"] > 0,
+        "batched_prefill_fewer_dispatches":
+            both["steady"]["prefill_dispatches"]
+            < radix["steady"]["prefill_dispatches"],
+        "batched_prefill_dispatches_per_step_lower":
+            both["steady"]["prefill_dispatches_per_step"]
+            < radix["steady"]["prefill_dispatches_per_step"],
+        "batched_prefill_no_slower":
+            both["steady"]["tokens_per_s"]
+            >= radix["steady"]["tokens_per_s"] * (1 - 1e-9),
+    }
+    for k, v in checks.items():
+        flag = "" if bool(v) else "  <-- EXPECTED TO HOLD"
+        print(f"  {k}: {v}{flag}")
+
+    for row in rows.values():
+        for p in ("warm", "steady"):
+            row[p].pop("tokens")           # keep the JSON artifact small
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parent / "BENCH_prefix.json"
+    payload = {"config": vars(args), "systems": rows, "checks": checks}
+    out.write_text(json.dumps(payload, indent=1, default=float))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

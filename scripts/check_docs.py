@@ -4,6 +4,11 @@
 Fails (exit 1) when:
   * a ``src/repro/serving/*.py`` module is not mentioned in
     ``docs/SERVING.md`` — every serving module must stay documented;
+  * a ``benchmarks/serving_*.py`` benchmark is not mentioned in
+    ``docs/SERVING.md`` — serving benchmarks must stay documented;
+  * a required serving topic (the prefix cache's radix tree,
+    refcount and copy-on-write rules, carbon-aware admission) is
+    missing from ``docs/SERVING.md``;
   * a top-level ``src/repro/*`` package is not mentioned in
     ``docs/ARCHITECTURE.md`` — the module map must not rot;
   * README does not link every ``docs/*.md`` page;
@@ -38,6 +43,15 @@ def main():
             continue
         if mod.name not in serving_doc:
             errors.append(f"docs/SERVING.md does not mention {mod.name}")
+    for bench in sorted((ROOT / "benchmarks").glob("serving_*.py")):
+        if bench.name not in serving_doc:
+            errors.append(f"docs/SERVING.md does not mention {bench.name}")
+    for topic in ("radix", "copy-on-write", "refcount",
+                  "carbon-aware admission"):
+        if topic.lower() not in serving_doc.lower():
+            errors.append(
+                f"docs/SERVING.md does not document {topic!r} "
+                "(prefix-cache rules must stay written down)")
 
     arch_doc = (ROOT / "docs" / "ARCHITECTURE.md").read_text() \
         if (ROOT / "docs" / "ARCHITECTURE.md").exists() else ""

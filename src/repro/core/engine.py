@@ -121,6 +121,8 @@ class DecodeSession:
     prompt: object = None               # real: stashed (padded) prompt
     prompt_len: int = 0                 # true prompt tokens to charge
     prompt_done: int = 0                # prefill tokens already charged
+    prefix_hit: int = 0                 # prompt tokens served by the
+                                        # prefix cache (no compute charged)
     max_new_tokens: int = 0
     _pos_sets: Optional[list] = None    # real: per-layer (P, k) active idx
     _batch: object = None               # real: DecodeBatch currently joined
@@ -149,7 +151,8 @@ class M2CacheEngine:
                  use_ssd: bool = True, ssd_dir: Optional[str] = None,
                  dram_capacity_gb: float = 56.0, hw: HostHW = HOST,
                  overlap: float = 0.8, device_name: str = "rtx3090",
-                 seed: int = 0, batched_decode: bool = True):
+                 seed: int = 0, batched_decode: bool = True,
+                 prefill_bucket: int = 8):
         assert mode in ("m2cache", "zero_infinity")
         assert (cfg is not None) != (paper_model is not None)
         self.cfg = cfg
@@ -166,6 +169,11 @@ class M2CacheEngine:
         # decode (and prices its serial weight traffic honestly); True
         # packs same-bucket sessions into one vmapped dispatch per step
         self.batched_decode = batched_decode
+        # prefill_bucket > 1 stacks up to that many same-width prompts
+        # entering prefill together into one vmapped jit dispatch (and
+        # prices each iteration's concurrent prefill chunks as one
+        # dispatch group); <= 1 keeps the per-session prefill path
+        self.prefill_bucket = max(int(prefill_bucket), 1)
         self._ssd_dir = ssd_dir or tempfile.mkdtemp(prefix="m2cache_ssd_")
         # one modeled async-DMA engine shared by weight preloads and KV
         # prefetch — both ride the same flash bus and PCIe link
@@ -173,6 +181,7 @@ class M2CacheEngine:
         self.prefetch.add_channel(SSD_CHANNEL, hw.ssd_bw)
         self.prefetch.add_channel(PCIE_CHANNEL, hw.pcie_bw)
         self.decode_dispatches = 0       # jit decode graphs launched
+        self.prefill_dispatches = 0      # jit prefill graphs launched
         self._batches: Dict[int, object] = {}   # bucket max_seq -> DecodeBatch
 
         if cfg is not None:
@@ -336,13 +345,23 @@ class M2CacheEngine:
 
     def begin_prefill(self, prompt=None, *, rid: int = 0,
                       prompt_len: Optional[int] = None,
-                      max_new_tokens: int = 32) -> DecodeSession:
+                      max_new_tokens: int = 32,
+                      prefix_hit: int = 0) -> DecodeSession:
         """Open a decode session without charging any clock.
 
         The prompt is processed by subsequent :meth:`prefill_chunk` calls
         (the scheduler interleaves them with decode steps of other
         requests). ``prompt_len`` may be shorter than a left-padded
         ``prompt``'s width; only the true length is charged.
+
+        ``prefix_hit`` marks the leading prompt tokens whose KV the
+        prefix cache serves from the tiered hierarchy: no prefill
+        compute is charged for them (``prompt_done`` starts there), the
+        scheduler charges their residency transfers instead. Real-tiny
+        mode still runs the full jit prefill at the first chunk — the
+        blocks are modeled surrogates, so recomputation is what keeps
+        tokens byte-identical with the cache on or off; only the modeled
+        clock skips the hit prefix.
         """
         if prompt is not None:
             prompt = np.asarray(prompt)
@@ -351,8 +370,10 @@ class M2CacheEngine:
             plen = int(prompt_len or prompt.shape[-1])
         else:
             plen = int(prompt_len or 1)
+        hit = min(max(int(prefix_hit), 0), plen - 1)
         sess = DecodeSession(rid=rid, prompt=prompt, prompt_len=plen,
-                             max_new_tokens=max_new_tokens)
+                             max_new_tokens=max_new_tokens,
+                             prompt_done=hit, prefix_hit=hit)
         if self.mode == "zero_infinity":
             return sess
         if not (self.params is not None and prompt is not None):
@@ -377,10 +398,13 @@ class M2CacheEngine:
         assert remaining > 0, "prefill already complete"
         n = remaining if max_tokens is None else min(max_tokens, remaining)
         assert n >= 1
+        dispatches = 0
         if self.mode == "zero_infinity":
             rep = self._zero_infinity_step(n)
         else:
             if self.params is not None and sess.prompt is not None:
+                if sess.runner is None:
+                    dispatches = 1       # first chunk runs the jit prefill
                 sets = self._real_chunk_sets(sess, n)
             else:
                 sets = [pr.step() for pr in sess.procs] if sess.procs else \
@@ -391,8 +415,10 @@ class M2CacheEngine:
             rep = StepReport(modeled_s=tok.modeled_s,
                              compute_s=tok.compute_s, batch_size=n,
                              report=tok, stall_s=tok.ssd_stall_s,
+                             jit_dispatches=dispatches,
                              overlapped_bytes=self.prefetch.stats
                              .overlapped_bytes - overlapped0)
+        self.prefill_dispatches += dispatches
         sess.prompt_done += n
         prev = sess.prefill_report
         sess.prefill_report = StepReport(
@@ -437,6 +463,156 @@ class M2CacheEngine:
                                   max_new_tokens=max_new_tokens)
         self.prefill_chunk(sess)
         return sess
+
+    def _stacked_real_prefill(self, news: list) -> int:
+        """Run the first-chunk jit prefill for real sessions that have no
+        runner yet, stacking same-bucket / same-width prompts into
+        vmapped dispatches of up to ``prefill_bucket`` rows. Returns the
+        number of prefill graphs launched."""
+        if not news:
+            return 0
+        import jax.numpy as jnp
+        from repro.core.engine_model import (_gather_row,
+                                             flatten_active_idx,
+                                             flatten_active_idx_batched)
+        groups: Dict[tuple, list] = {}
+        for s in news:
+            s.runner = self._runner_for(int(s.prompt.shape[-1])
+                                        + s.max_new_tokens + 1)
+            groups.setdefault((id(s.runner), s.prompt.shape[-1]),
+                              []).append(s)
+        # audio prompts carry a codebook axis the row-stacking helpers
+        # don't handle — run them per-session, like batched decode does
+        bucket = 1 if self.cfg.family == "audio" else self.prefill_bucket
+        dispatches = 0
+        for members in groups.values():
+            runner = members[0].runner
+            for i in range(0, len(members), bucket):
+                grp = members[i:i + bucket]
+                dispatches += 1
+                if len(grp) == 1:
+                    s = grp[0]
+                    s.last, s.cache, aux = runner._prefill(
+                        self.params, jnp.asarray(s.prompt))
+                    s._pos_sets = [np.asarray(a) for a in
+                                   flatten_active_idx(self.cfg, aux)]
+                    continue
+                cap = 1 << (len(grp) - 1).bit_length()   # pow2: one trace
+                rows = np.concatenate(
+                    [np.stack([np.asarray(s.prompt[0]) for s in grp])]
+                    + [np.asarray(grp[0].prompt)] * (cap - len(grp)))
+                last, cache, aux = runner._prefill_rows(
+                    self.params, jnp.asarray(rows))
+                per_layer = flatten_active_idx_batched(self.cfg, aux)
+                for j, s in enumerate(grp):
+                    s.last = last[j][None]
+                    s.cache = _gather_row(cache, j)
+                    s._pos_sets = [np.asarray(arr[j])
+                                   for arr in per_layer]
+        return dispatches
+
+    def prefill_step(self, sessions: Sequence[DecodeSession],
+                     max_tokens: Optional[int] = None
+                     ) -> Optional[StepReport]:
+        """One batched prefill step: every session advances one chunk.
+
+        The prefill analogue of :meth:`decode_step`: with
+        ``prefill_bucket`` > 1, sessions whose first chunk lands this
+        iteration run their jit prefill as stacked vmapped dispatches
+        (one graph per bucket group instead of one per session), and the
+        iteration's concurrent chunks are *priced* as one dispatch group
+        — weight traffic charged once for the union of the chunks'
+        active sets while compute scales with the summed chunk tokens,
+        exactly the dispatch-group rule batched decode uses. With
+        ``prefill_bucket=1`` each session pays the legacy per-session
+        :meth:`prefill_chunk` path. Tokens are unaffected either way
+        (vmap preserves per-row numerics bitwise).
+
+        Returns the aggregate :class:`StepReport` (``jit_dispatches`` =
+        prefill graphs launched this step), or None with no work."""
+        sessions = [s for s in sessions
+                    if s.prompt_done < s.prompt_len]
+        if not sessions:
+            return None
+        if self.prefill_bucket <= 1 or self.mode == "zero_infinity" \
+                or len(sessions) == 1:
+            # per-session fallback: serial charging, one graph per first
+            # chunk — the pre-batching baseline
+            clock0 = self.clock
+            comp = stall = over = 0.0
+            disp = total = 0
+            for s in sessions:
+                rep = self.prefill_chunk(s, max_tokens)
+                comp += rep.compute_s
+                stall += rep.stall_s
+                over += rep.overlapped_bytes
+                disp += rep.jit_dispatches
+                total += rep.batch_size
+            return StepReport(modeled_s=self.clock - clock0,
+                              compute_s=comp, batch_size=total,
+                              jit_dispatches=disp, stall_s=stall,
+                              overlapped_bytes=over)
+        clock0 = self.clock
+        overlapped0 = self.prefetch.stats.overlapped_bytes
+        ns = {}
+        for s in sessions:
+            remaining = s.prompt_len - s.prompt_done
+            ns[id(s)] = remaining if max_tokens is None \
+                else min(max_tokens, remaining)
+        real = [s for s in sessions if self.params is not None
+                and s.prompt is not None]
+        real_ids = {id(s) for s in real}
+        other = [s for s in sessions if id(s) not in real_ids]
+        dispatches = self._stacked_real_prefill(
+            [s for s in real if s.runner is None])
+        # dispatch groups for pricing: real sessions per runner bucket,
+        # analytic sessions together
+        groups: List[list] = []
+        buckets: Dict[int, list] = {}
+        for s in real:
+            buckets.setdefault(id(s.runner), []).append(s)
+        groups.extend(buckets.values())
+        if other:
+            groups.append(other)
+        t_compute = stall = 0.0
+        for members in groups:
+            gtokens = sum(ns[id(s)] for s in members)
+            per_sess_sets = []
+            for s in members:
+                if id(s) in real_ids:
+                    per_sess_sets.append(
+                        self._real_chunk_sets(s, ns[id(s)]))
+                elif s.procs:
+                    per_sess_sets.append([pr.step() for pr in s.procs])
+                else:
+                    per_sess_sets.append(
+                        [np.zeros(0, np.int64)] * self.num_layers)
+            rows_per_layer = [
+                np.stack([sets[l] for sets in per_sess_sets])
+                for l in range(self.num_layers)]
+            sets, tiers = self._union_active(rows_per_layer)
+            tok = self.manager.process_token(sets, tiers,
+                                             batch_size=gtokens)
+            t_compute += tok.compute_s
+            stall += tok.ssd_stall_s
+            # bill each member its token-weighted share for reporting
+            for s in members:
+                share = ns[id(s)] / max(gtokens, 1)
+                prev = s.prefill_report
+                s.prefill_report = StepReport(
+                    modeled_s=tok.modeled_s * share
+                    + (prev.modeled_s if prev else 0.0),
+                    compute_s=tok.compute_s * share
+                    + (prev.compute_s if prev else 0.0),
+                    batch_size=s.prompt_done + ns[id(s)], report=tok)
+                s.prompt_done += ns[id(s)]
+        self.prefill_dispatches += dispatches
+        return StepReport(
+            modeled_s=self.clock - clock0, compute_s=t_compute,
+            batch_size=sum(ns.values()), jit_dispatches=dispatches,
+            stall_s=stall,
+            overlapped_bytes=self.prefetch.stats.overlapped_bytes
+            - overlapped0)
 
     def _batch_for(self, runner):
         """Persistent DecodeBatch for one seq-length bucket."""

@@ -13,6 +13,18 @@ retrace — only growing the row capacity (powers of two) does. vmap keeps
 each row's computation — predictor top-k, active set, argmax — identical
 to the per-session graph, which is what makes batched decode emit
 byte-identical tokens.
+
+``RealModelRunner._prefill_rows`` is the prefill analogue: G same-width
+prompts entering prefill together are stacked on a leading row axis and
+run under one vmapped jit dispatch. vmap (not the model's natural batch
+axis!) is essential for numerics: the MP-Inference predictor's top-k
+active set is *batch-shared* inside one forward, so stacking prompts on
+the batch axis would compute one shared active set across unrelated
+requests and change every token; vmapping the single-prompt graph keeps
+each row's active sets — and therefore its logits — bitwise identical
+to the per-session prefill. Row counts are padded to powers of two
+(repeating row 0) so membership churn retraces one graph per
+(rows, width) bucket, not per group size.
 """
 from __future__ import annotations
 
@@ -111,11 +123,24 @@ class RealModelRunner:
                                            mode="decode", m2=True)
             return logits[0, -1, :], cache, nxt, aux["active_idx"]
 
+        def prefill_one_row(params, tokens):
+            # one prompt row: identical per-row math to `prefill` with
+            # B=1 (own cache, own predictor top-k), so vmapping it
+            # preserves per-session prefill numerics exactly
+            cache = T.init_cache(cfg, 1, max_seq=max_seq, dtype=dtype)
+            logits, cache, aux = T.forward(cfg, params, tokens[None],
+                                           cache=cache, mode="prefill",
+                                           m2=True)
+            return logits[0, -1, :], cache, aux["active_idx"]
+
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode)
         # one dispatch advances every row of a stacked decode batch
         self._decode_batched = jax.jit(
             jax.vmap(decode_one_row, in_axes=(None, 0, 0)))
+        # one dispatch prefills every row of a stacked prompt group
+        self._prefill_rows = jax.jit(
+            jax.vmap(prefill_one_row, in_axes=(None, 0)))
 
     def generate(self, prompts, gen_len: int
                  ) -> Tuple[np.ndarray, List[List[np.ndarray]]]:

@@ -19,6 +19,12 @@ Real tiny model (actual decode, modeled clock):
   PYTHONPATH=src python -m repro.launch.server --arch qwen2.5-14b --tiny \
       --requests 6 --rate 2.0 --max-batch 4
 
+Radix prefix cache on chat-style shared-prefix traffic (KV reuse across
+requests, batched prefill):
+  PYTHONPATH=src python -m repro.launch.server --arch qwen2.5-14b --tiny \
+      --workload shared-prefix --prefix-cache --prefix-reuse 0.7 \
+      --turns 2 --requests 8 --prefill-chunk 8 --prefill-bucket 8
+
 ZeRO-Inference baseline under the same scheduler:
   PYTHONPATH=src python -m repro.launch.server --paper-model llama-7b \
       --mode zero_infinity --requests 8
@@ -32,7 +38,7 @@ from repro.core.carbon import CarbonIntensityTrace
 from repro.core.engine import PAPER_MODELS, M2CacheEngine
 from repro.serving import (ContinuousBatchScheduler, assign_slo_classes,
                            bursty_trace, make_policy, poisson_trace,
-                           requests_from_trace)
+                           requests_from_trace, shared_prefix_trace)
 
 
 def build_engine(args) -> M2CacheEngine:
@@ -41,7 +47,8 @@ def build_engine(args) -> M2CacheEngine:
                              hbm_policy=args.hbm_policy,
                              use_ssd=not args.no_ssd,
                              dram_capacity_gb=args.dram_gb, seed=args.seed,
-                             batched_decode=not args.no_batched_decode)
+                             batched_decode=not args.no_batched_decode,
+                             prefill_bucket=args.prefill_bucket)
     import jax
     import jax.numpy as jnp
     from repro.configs.base import get_config
@@ -53,7 +60,8 @@ def build_engine(args) -> M2CacheEngine:
                          hbm_policy=args.hbm_policy,
                          use_ssd=not args.no_ssd,
                          dram_capacity_gb=args.dram_gb, seed=args.seed,
-                         batched_decode=not args.no_batched_decode)
+                         batched_decode=not args.no_batched_decode,
+                         prefill_bucket=args.prefill_bucket)
 
 
 def build_trace(args):
@@ -78,13 +86,20 @@ def parse_slo_mix(spec: str):
     return mix
 
 
-def build_workload(args):
+def build_workload(args, vocab_size=None):
     if args.workload == "bursty":
         events = bursty_trace(args.requests, burst_size=args.burst_size,
                               burst_gap_s=args.burst_gap,
                               rate_in_burst_rps=args.rate, seed=args.seed,
                               prompt_len=tuple(args.prompt_len),
                               gen_len=tuple(args.gen_len))
+    elif args.workload == "shared-prefix":
+        events = shared_prefix_trace(
+            args.requests, rate_rps=args.rate,
+            num_groups=args.prefix_groups, prefix_len=args.shared_prefix_len,
+            reuse_ratio=args.prefix_reuse, turns=args.turns,
+            gen_len=tuple(args.gen_len),
+            vocab_size=vocab_size or 50000, seed=args.seed)
     else:
         events = poisson_trace(args.requests, args.rate, seed=args.seed,
                                prompt_len=tuple(args.prompt_len),
@@ -109,7 +124,17 @@ def main():
     ap.add_argument("--dram-gb", type=float, default=6.0)
     # workload
     ap.add_argument("--workload", default="poisson",
-                    choices=["poisson", "bursty"])
+                    choices=["poisson", "bursty", "shared-prefix"])
+    ap.add_argument("--prefix-groups", type=int, default=4,
+                    help="distinct shared system prompts "
+                         "(shared-prefix workload)")
+    ap.add_argument("--shared-prefix-len", type=int, default=64,
+                    help="shared prefix tokens (shared-prefix workload)")
+    ap.add_argument("--prefix-reuse", type=float, default=0.7,
+                    help="fraction of conversations opening with a "
+                         "shared prefix (shared-prefix workload)")
+    ap.add_argument("--turns", type=int, default=1,
+                    help="turns per conversation (shared-prefix workload)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0,
                     help="Poisson arrival rate (req/s, modeled clock)")
@@ -141,12 +166,29 @@ def main():
     ap.add_argument("--no-kv-prefetch", action="store_true",
                     help="disable predictive KV promotion; every resume "
                          "pays the serial swap-in")
+    ap.add_argument("--prefix-cache", default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help="--prefix-cache enables radix-tree KV prefix "
+                         "reuse across requests (--no-prefix-cache "
+                         "recomputes every prompt, the default)")
+    ap.add_argument("--prefix-capacity", type=int, default=65536,
+                    help="prefix-cache budget in cached tokens")
+    ap.add_argument("--prefix-carbon-aware", action="store_true",
+                    help="gate prefix-cache inserts on the carbon trace "
+                         "(skip caching when recompute-later is greener)")
+    ap.add_argument("--prefill-bucket", type=int, default=8,
+                    help="max same-width prompts stacked into one vmapped "
+                         "prefill dispatch (<=1: per-session prefill)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if not args.prefix_cache and (args.prefix_carbon_aware
+                                  or args.prefix_capacity != 65536):
+        ap.error("--prefix-carbon-aware/--prefix-capacity require "
+                 "--prefix-cache")
 
     eng = build_engine(args)
-    trace = build_workload(args)
     vocab = eng.cfg.vocab_size if eng.cfg is not None else None
+    trace = build_workload(args, vocab)
     reqs = requests_from_trace(trace, vocab_size=vocab, seed=args.seed)
     carbon_trace = build_trace(args)
     policy = make_policy(args.policy, trace=carbon_trace,
@@ -157,12 +199,18 @@ def main():
                                      policy=policy,
                                      prefill_chunk=args.prefill_chunk,
                                      carbon_trace=carbon_trace,
-                                     kv_prefetch=not args.no_kv_prefetch)
+                                     kv_prefetch=not args.no_kv_prefetch,
+                                     prefix_caching=args.prefix_cache,
+                                     prefix_capacity_tokens=
+                                     args.prefix_capacity,
+                                     prefix_carbon_aware=
+                                     args.prefix_carbon_aware)
     rep = sched.run(reqs)
     print(json.dumps({
         "summary": rep.summary(),
         "kv": rep.kv_stats,
         "cache": rep.cache_stats,
+        "prefix": rep.prefix_stats,
         "carbon_g": rep.carbon,
     }, indent=1, default=float))
 

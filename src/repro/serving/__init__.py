@@ -1,24 +1,28 @@
 """Multi-request serving subsystem: continuous batching over the M2Cache
-hierarchy, with per-request KV state paged across HBM→DRAM→SSD, chunked
-prefill, and pluggable FCFS / SLO-aware / carbon-aware scheduling
-policies."""
+hierarchy, with per-request KV state paged across HBM→DRAM→SSD, chunked +
+batched prefill, radix-tree prefix caching (KV reuse across requests,
+paged over the same tiers), and pluggable FCFS / SLO-aware /
+carbon-aware scheduling policies."""
 from repro.serving.kv_cache import TieredKVCache
 from repro.serving.policy import (CarbonAwarePolicy, FCFSPolicy,
                                   SchedulingPolicy, SLOAwarePolicy,
                                   make_policy)
+from repro.serving.prefix_cache import MatchResult, PrefixCache, RadixNode
 from repro.serving.request import (SLO_CLASSES, RequestState, ServingRequest,
                                    SLOSpec)
 from repro.serving.scheduler import (ContinuousBatchScheduler, FCFSScheduler,
                                      Request, RequestQueue, ServingReport)
 from repro.serving.workload import (ArrivalEvent, assign_slo_classes,
                                     bursty_trace, closed_trace,
-                                    poisson_trace, requests_from_trace)
+                                    poisson_trace, requests_from_trace,
+                                    shared_prefix_trace)
 
 __all__ = [
     "ArrivalEvent", "CarbonAwarePolicy", "ContinuousBatchScheduler",
-    "FCFSPolicy", "FCFSScheduler", "Request", "RequestQueue", "RequestState",
+    "FCFSPolicy", "FCFSScheduler", "MatchResult", "PrefixCache",
+    "RadixNode", "Request", "RequestQueue", "RequestState",
     "SLOAwarePolicy", "SLOSpec", "SLO_CLASSES", "SchedulingPolicy",
     "ServingReport", "ServingRequest", "TieredKVCache",
     "assign_slo_classes", "bursty_trace", "closed_trace", "make_policy",
-    "poisson_trace", "requests_from_trace",
+    "poisson_trace", "requests_from_trace", "shared_prefix_trace",
 ]

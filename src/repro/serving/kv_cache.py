@@ -31,6 +31,17 @@ the modeled SSD/PCIe channels (contending with the weight preloader on
 the same flash bus) and overlap with the current step's compute.
 A later ``ensure_resident(..., now=clock)`` charges only the residual
 stall of still-in-flight transfers instead of the full serial swap time.
+
+**Prefix sharing** (``serving/prefix_cache.py``): radix-tree nodes own
+block ranges under their own (negative) rids. :meth:`adopt_blocks`
+transfers block ownership between rids (a metadata move, no transfer
+charged — the bytes do not move tiers), which is how a finished prefill
+donates its prompt blocks to the tree and how a node split partitions
+an edge. :meth:`pin`/:meth:`unpin` protect a rid's blocks from HBM
+eviction for as long as some running request reads them (refcounted
+prefix blocks must not be demoted mid-decode); unpinned node blocks age
+out of HBM through the normal LRU path, so cold prefixes demote to
+DRAM and then flash under the same transfer-clock pricing as request KV.
 """
 from __future__ import annotations
 
@@ -86,6 +97,7 @@ class TieredKVCache:
         self.blocks: Dict[int, KVBlock] = {}
         self.table: Dict[int, List[int]] = {}      # rid -> block ids
         self.tokens: Dict[int, int] = {}           # rid -> tokens stored
+        self.pinned: set = set()                   # rids exempt from eviction
         self._hbm_lru: "OrderedDict[int, None]" = OrderedDict()
         self.hbm_used = 0.0
         self._next_bid = 0
@@ -150,7 +162,7 @@ class TieredKVCache:
         """LRU-evict non-protected HBM blocks until ``need_bytes`` fit.
         May leave the cache over budget if everything is protected — the
         scheduler resolves that by preempting a running request."""
-        protect = set(protect)
+        protect = set(protect) | self.pinned
         dt = 0.0
         while self.hbm_used + need_bytes > self.hbm_capacity:
             victim = next((b for b in self._hbm_lru
@@ -310,8 +322,40 @@ class TieredKVCache:
         self.preempt_swaps += 1
         return self._charge(dt)
 
+    # ------------------------------------------------------------------
+    # prefix-cache support: pinning + block-ownership transfer
+
+    def pin(self, rid: int):
+        """Exempt a rid's blocks from HBM eviction (refcounted prefix
+        blocks that running requests read every step). Pinning never
+        *promotes* — callers pair it with :meth:`ensure_resident`."""
+        self.pinned.add(rid)
+
+    def unpin(self, rid: int):
+        self.pinned.discard(rid)
+
+    def adopt_blocks(self, src_rid: int, dst_rid: int, nblocks: int, *,
+                     start_block: int = 0):
+        """Transfer ``nblocks`` whole blocks of ``src_rid``'s table
+        (starting at ``start_block``) to ``dst_rid``. Pure ownership
+        metadata — no bytes move between tiers, so nothing is charged.
+        The prefix cache uses this to (a) donate a finished prefill's
+        full prompt blocks to a radix node and (b) partition a node's
+        blocks when a copy-on-write split forks the edge."""
+        blocks = self.table[src_rid]
+        assert 0 <= start_block and start_block + nblocks <= len(blocks)
+        moved = blocks[start_block:start_block + nblocks]
+        del blocks[start_block:start_block + nblocks]
+        for bid in moved:
+            self.blocks[bid].rid = dst_rid
+        self.table.setdefault(dst_rid, []).extend(moved)
+        moved_tokens = nblocks * self.block_tokens
+        self.tokens[src_rid] = max(self.tokens[src_rid] - moved_tokens, 0)
+        self.tokens[dst_rid] = self.tokens.get(dst_rid, 0) + moved_tokens
+
     def free(self, rid: int):
         """Release a finished request's blocks from every tier."""
+        self.pinned.discard(rid)
         for bid in self.table.pop(rid, []):
             blk = self.blocks.pop(bid)
             if self.prefetch is not None:
@@ -330,8 +374,9 @@ class TieredKVCache:
         return self.hbm_used > self.hbm_capacity
 
     def can_admit(self, ntokens: int, protect: Iterable[int] = ()) -> bool:
-        """Room for a request's blocks given protected (running) blocks?"""
-        protect = set(protect)
+        """Room for a request's blocks given protected (running) blocks?
+        Pinned (refcounted prefix) blocks count as protected too."""
+        protect = set(protect) | self.pinned
         protected = sum(self.blocks[b].nbytes for b in self._hbm_lru
                         if self.blocks[b].rid in protect)
         need = self.blocks_for(ntokens) * self.block_bytes
@@ -350,6 +395,9 @@ class TieredKVCache:
             "kv_ssd_read_bytes": self.ssd.bytes_read * self.byte_scale,
             "kv_swap_s": self.swap_s,
             "kv_preempt_swaps": self.preempt_swaps,
+            "kv_pinned_bytes": sum(
+                self.blocks[b].nbytes for r in self.pinned
+                for b in self.table.get(r, [])),
             "kv_prefetch_issued_bytes": self.prefetch_issued_bytes,
             "kv_prefetch_overlap_bytes": self.prefetch_overlap_bytes,
             "kv_prefetch_stall_s": self.prefetch_stall_s,

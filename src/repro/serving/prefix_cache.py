@@ -1,0 +1,363 @@
+"""Radix-tree prefix cache: KV reuse across requests over the tiered
+HBM→DRAM→SSD hierarchy.
+
+Chat-style traffic repeats prompt prefixes constantly — a hot system
+prompt is shared by thousands of requests, a multi-turn conversation
+re-sends its whole history every turn. Recomputing that KV state per
+request wastes exactly the resource M2Cache's hierarchy exists to
+stretch. This module deduplicates prompt KV at **block granularity**:
+
+* a **radix tree** keyed on token-ID prefixes. Each node's edge is a
+  run of whole KV blocks (``block_tokens`` tokens each); children are
+  keyed by their first block's token tuple, so lookup walks block by
+  block and never compares partial blocks. A prompt "hits" the tokens
+  of every node whose *entire* edge it matches (partial-edge overlap is
+  not counted — a later insert that diverges mid-edge splits the node,
+  after which the shared half becomes independently matchable);
+* **refcounted node ownership of TieredKVCache block ranges**: every
+  node owns its edge's blocks under a private (negative) rid in the
+  same :class:`~repro.serving.kv_cache.TieredKVCache` that pages
+  request KV. While any admitted request *locks* a node, its rid is
+  ``pin()``-ned — the blocks cannot be evicted from HBM mid-decode.
+  When the last locker releases, the node unpins: a hot system-prompt
+  prefix stays in HBM, warm conversation histories age to DRAM, and
+  cold prefixes demote all the way to flash under the normal LRU +
+  transfer-clock pricing. A later hit pays ``ensure_resident`` (modeled
+  PCIe/NVMe seconds) instead of prefill recompute — the tiered-reuse
+  trade at the heart of the design;
+* **copy-on-write forks**: shared blocks are immutable. A request that
+  diverges from a cached prefix computes fresh blocks for its suffix
+  under its own rid (never writing shared state); when its prefill
+  completes it donates the *full prompt blocks* past the matched point
+  back to the tree via ``TieredKVCache.adopt_blocks`` (an ownership
+  move, not a copy — the KV bytes stay where they are). Divergence
+  inside an existing edge splits the node at the matched block
+  boundary, partitioning its block range between parent and child;
+* **carbon-aware admission**: caching is storage — it spends DRAM/SSD
+  residency (and displacement pressure) now to avoid prefill compute
+  later. When a :class:`~repro.core.carbon.CarbonIntensityTrace` says
+  the grid is dirty *now* but a window below the threshold opens within
+  ``defer_horizon_s``, recompute-later is greener than store-now and
+  the insert is skipped (the same guardrail pattern as
+  ``policy.CarbonAwarePolicy``: a grid that never improves is no reason
+  to skip caching);
+* **LRU reclaim**: ``capacity_tokens`` bounds the tree. Over budget,
+  unlocked *leaf* nodes are freed coldest-first (``kv.free`` releases
+  their blocks from every tier); locked nodes and interior nodes with
+  surviving children are never reclaimed.
+
+Full-prompt matches are capped one block short of the prompt length so
+at least one suffix token is always recomputed — the engine needs the
+last position's logits to start decoding (the standard paged-prefix
+rule).
+
+All "seconds" charged by this module come from ``TieredKVCache`` calls
+the *scheduler* makes (``ensure_resident`` on hit, normal paging on
+demotion); the tree itself is bookkeeping and charges nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.carbon import CarbonIntensityTrace
+from repro.serving.kv_cache import TieredKVCache
+
+BlockKey = Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class RadixNode:
+    """One edge of the radix tree: a run of whole KV blocks.
+
+    Two reference sets with different lifetimes: ``holders`` are every
+    request holding a ref (admission → finish, surviving preemption) —
+    they protect the node from reclaim; ``lockers`` ⊆ holders are the
+    *running* holders — they pin the node's blocks in HBM. Preemption
+    moves a rid out of ``lockers`` but never out of ``holders``.
+    """
+    rid: int                                   # TieredKVCache rid (< 0)
+    blocks: List[BlockKey]                     # edge token content
+    parent: Optional["RadixNode"] = None
+    children: Dict[BlockKey, "RadixNode"] = \
+        dataclasses.field(default_factory=dict)
+    holders: set = dataclasses.field(default_factory=set)
+    lockers: set = dataclasses.field(default_factory=set)
+    last_used: float = 0.0                     # modeled s (LRU reclaim)
+
+    @property
+    def ntokens(self) -> int:
+        return sum(len(b) for b in self.blocks)
+
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+@dataclasses.dataclass
+class MatchResult:
+    hit_tokens: int                            # whole-block matched tokens
+    nodes: List[RadixNode]                     # fully-matched path nodes
+
+
+class PrefixCache:
+    """Radix-tree KV prefix cache over one :class:`TieredKVCache`.
+
+    The scheduler drives it per request: :meth:`match` (size the KV
+    admission check), :meth:`lock` (take refs on the hit path at
+    admission), :meth:`insert` (donate the finished prefill's prompt
+    blocks), :meth:`suspend`/:meth:`resume` (preemption unpins/repins
+    without dropping refs), :meth:`release` (drop refs at finish).
+    """
+
+    def __init__(self, kv: TieredKVCache, *,
+                 capacity_tokens: int = 65536,
+                 carbon_trace: Optional[CarbonIntensityTrace] = None,
+                 carbon_threshold_g_kwh: float = 300.0,
+                 defer_horizon_s: float = 1800.0):
+        self.kv = kv
+        self.block_tokens = kv.block_tokens
+        self.capacity_tokens = int(capacity_tokens)
+        self.carbon_trace = carbon_trace
+        self.carbon_threshold = carbon_threshold_g_kwh
+        self.defer_horizon_s = defer_horizon_s
+        self.root = RadixNode(rid=0, blocks=[])
+        self._locked: Dict[int, List[RadixNode]] = {}   # rid -> path nodes
+        self._next_node_rid = -2            # negative: never a request rid
+        self.cached_tokens = 0
+        self.nodes = 0
+        # lifetime counters (benchmarks snapshot/diff them per run)
+        self.lookups = 0
+        self.hit_requests = 0
+        self.hit_tokens_total = 0
+        self.lookup_tokens_total = 0
+        self.inserted_tokens = 0
+        self.insert_skips_carbon = 0
+        self.reclaimed_tokens = 0
+        self.splits = 0
+
+    # ------------------------------------------------------------------
+    def _query_blocks(self, tokens: Tuple[int, ...]) -> List[BlockKey]:
+        """Whole matchable blocks of a prompt, capped one block short of
+        the full length so ≥1 suffix token is always recomputed."""
+        bt = self.block_tokens
+        usable = ((len(tokens) - 1) // bt) * bt if tokens else 0
+        return [tuple(tokens[i:i + bt]) for i in range(0, usable, bt)]
+
+    def _walk(self, qb: List[BlockKey]) -> Tuple[List[RadixNode], int, int]:
+        """Walk fully-matched nodes. Returns (path, matched_blocks,
+        partial) where ``partial`` is how many leading blocks of the
+        *next* child's edge also match (0 = clean divergence)."""
+        path: List[RadixNode] = []
+        node, i = self.root, 0
+        while i < len(qb):
+            child = node.children.get(qb[i])
+            if child is None:
+                return path, i, 0
+            j = 0
+            while j < len(child.blocks) and i + j < len(qb) \
+                    and child.blocks[j] == qb[i + j]:
+                j += 1
+            if j < len(child.blocks):
+                return path, i, j            # ends inside child's edge
+            path.append(child)
+            i += j
+            node = child
+        return path, i, 0
+
+    # ------------------------------------------------------------------
+    def match(self, tokens: Tuple[int, ...]) -> MatchResult:
+        """Pure lookup (no refs): whole-block hit length + path nodes."""
+        path, matched, _ = self._walk(self._query_blocks(tokens))
+        return MatchResult(hit_tokens=matched * self.block_tokens,
+                           nodes=path)
+
+    def lock(self, rid: int, tokens: Tuple[int, ...], *,
+             now: float = 0.0) -> MatchResult:
+        """Match and take refs on the hit path for ``rid``: each path
+        node gains a locker and its blocks are pinned against HBM
+        eviction until :meth:`release`."""
+        assert rid not in self._locked, f"rid {rid} already holds locks"
+        m = self.match(tokens)
+        self._locked[rid] = list(m.nodes)
+        for node in m.nodes:
+            if not node.lockers:
+                self.kv.pin(node.rid)
+            node.holders.add(rid)
+            node.lockers.add(rid)
+            node.last_used = max(node.last_used, now)
+        self.lookups += 1
+        self.lookup_tokens_total += len(tokens)
+        if m.hit_tokens:
+            self.hit_requests += 1
+            self.hit_tokens_total += m.hit_tokens
+        return m
+
+    def node_rids(self, rid: int) -> List[int]:
+        """KV rids of the nodes ``rid`` currently locks (root→leaf
+        order) — what the scheduler must keep resident for its decode."""
+        return [n.rid for n in self._locked.get(rid, [])]
+
+    def release(self, rid: int, *, now: float = 0.0):
+        """Drop ``rid``'s refs; nodes with no lockers left unpin (their
+        blocks re-enter normal LRU aging toward DRAM/SSD), nodes with no
+        holders left become reclaimable."""
+        for node in self._locked.pop(rid, []):
+            node.holders.discard(rid)
+            node.lockers.discard(rid)
+            node.last_used = max(node.last_used, now)
+            if not node.lockers:
+                self.kv.unpin(node.rid)
+
+    def suspend(self, rid: int):
+        """Preemption: unpin ``rid``'s path. The rid stays a *holder* of
+        every path node — a parked request's prefix may age out of HBM
+        but can never be reclaimed out from under it."""
+        for node in self._locked.get(rid, []):
+            node.lockers.discard(rid)
+            if not node.lockers:
+                self.kv.unpin(node.rid)
+
+    def resume(self, rid: int):
+        """Resume after preemption: re-pin the held path."""
+        for node in self._locked.get(rid, []):
+            if not node.lockers:
+                self.kv.pin(node.rid)
+            node.lockers.add(rid)
+
+    # ------------------------------------------------------------------
+    def _should_cache(self, now: float) -> bool:
+        """Carbon-aware admission: skip caching when the grid is dirty
+        *now* and a cleaner window inside ``defer_horizon_s`` makes
+        recompute-later greener than store-now."""
+        if self.carbon_trace is None:
+            return True
+        if self.carbon_trace.intensity_at(now) <= self.carbon_threshold:
+            return True
+        return self.carbon_trace.next_window_below(
+            now, self.carbon_threshold,
+            horizon_s=self.defer_horizon_s) is None
+
+    def _split(self, node: RadixNode, at_blocks: int) -> RadixNode:
+        """Copy-on-write fork: split ``node``'s edge after ``at_blocks``
+        blocks. ``node`` keeps the head; a new child takes the tail
+        (blocks partitioned via ``adopt_blocks`` — no bytes move) along
+        with the old children, holders and lockers (every holder of
+        ``node`` matched its whole edge, so it holds the tail too —
+        including preempted holders, whose resume must re-pin both
+        halves)."""
+        assert 0 < at_blocks < len(node.blocks)
+        tail = RadixNode(rid=self._next_node_rid,
+                         blocks=node.blocks[at_blocks:], parent=node,
+                         children=node.children,
+                         holders=set(node.holders),
+                         lockers=set(node.lockers),
+                         last_used=node.last_used)
+        self._next_node_rid -= 1
+        for child in tail.children.values():
+            child.parent = tail
+        self.kv.adopt_blocks(node.rid, tail.rid,
+                             len(node.blocks) - at_blocks,
+                             start_block=at_blocks)
+        node.blocks = node.blocks[:at_blocks]
+        node.children = {tail.blocks[0]: tail}
+        for r in tail.holders:
+            held = self._locked[r]
+            held.insert(held.index(node) + 1, tail)
+        if tail.lockers:
+            self.kv.pin(tail.rid)
+        self.nodes += 1
+        self.splits += 1
+        return tail
+
+    def insert(self, rid: int, tokens: Tuple[int, ...], *,
+               prefix_hit: int, now: float = 0.0) -> int:
+        """Donate ``rid``'s freshly-prefilled full prompt blocks to the
+        tree. ``prefix_hit`` is the whole-block hit the request was
+        admitted with — its own KV blocks cover ``[prefix_hit, ...)``.
+        New nodes are locked for ``rid`` (the request keeps reading the
+        donated blocks until it finishes). Returns donated tokens."""
+        if not self._should_cache(now):
+            self.insert_skips_carbon += 1
+            return 0
+        qb = self._query_blocks(tokens)
+        path, matched, partial = self._walk(qb)
+        if partial:
+            # divergence inside an edge: fork at the matched boundary so
+            # the shared head becomes matchable on its own
+            child = path[-1].children[qb[matched]] if path \
+                else self.root.children[qb[matched]]
+            self._split(child, partial)
+            path.append(child)
+            matched += partial
+        donate_from = matched * self.block_tokens
+        # the tree may have grown past our admission-time hit (another
+        # request inserted the same prefix first); our duplicate blocks
+        # for [prefix_hit, donate_from) stay owned by the request
+        if donate_from < prefix_hit or matched >= len(qb):
+            return 0
+        nblocks = len(qb) - matched
+        start_block = (donate_from - prefix_hit) // self.block_tokens
+        node = RadixNode(rid=self._next_node_rid, blocks=qb[matched:],
+                         parent=path[-1] if path else self.root,
+                         last_used=now)
+        self._next_node_rid -= 1
+        self.kv.adopt_blocks(rid, node.rid, nblocks,
+                             start_block=start_block)
+        node.parent.children[node.blocks[0]] = node
+        self.nodes += 1
+        ntok = node.ntokens
+        self.cached_tokens += ntok
+        self.inserted_tokens += ntok
+        # the donor keeps reading these blocks: hold + pin immediately
+        node.holders.add(rid)
+        node.lockers.add(rid)
+        self._locked.setdefault(rid, []).append(node)
+        self.kv.pin(node.rid)
+        self._reclaim(now)
+        return ntok
+
+    # ------------------------------------------------------------------
+    def _reclaim(self, now: float):
+        """Free coldest unheld leaves until under ``capacity_tokens``.
+        Nodes with any holder — running *or preempted* — are immune.
+        One tree traversal seeds a min-heap of candidates; freeing a
+        leaf may expose its parent, which re-enters the heap."""
+        if self.cached_tokens <= self.capacity_tokens:
+            return
+        heap = []
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node is not self.root and not node.holders \
+                    and node.is_leaf():
+                heapq.heappush(heap, (node.last_used, id(node), node))
+        while self.cached_tokens > self.capacity_tokens and heap:
+            _, _, victim = heapq.heappop(heap)
+            parent = victim.parent
+            self.kv.free(victim.rid)
+            del parent.children[victim.blocks[0]]
+            self.cached_tokens -= victim.ntokens
+            self.reclaimed_tokens += victim.ntokens
+            self.nodes -= 1
+            if parent is not self.root and not parent.holders \
+                    and parent.is_leaf():
+                heapq.heappush(heap, (parent.last_used, id(parent),
+                                      parent))
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "prefix_nodes": self.nodes,
+            "prefix_cached_tokens": self.cached_tokens,
+            "prefix_lookups": self.lookups,
+            "prefix_hit_requests": self.hit_requests,
+            "prefix_hit_tokens": self.hit_tokens_total,
+            "prefix_lookup_tokens": self.lookup_tokens_total,
+            "prefix_hit_rate": self.hit_tokens_total
+            / max(self.lookup_tokens_total, 1),
+            "prefix_inserted_tokens": self.inserted_tokens,
+            "prefix_insert_skips_carbon": self.insert_skips_carbon,
+            "prefix_reclaimed_tokens": self.reclaimed_tokens,
+            "prefix_splits": self.splits,
+        }

@@ -76,7 +76,10 @@ class ServingRequest:
     generated: int = 0
     prompt_done: int = 0                      # prefill tokens completed
     preemptions: int = 0
+    prefix_hit: int = 0                       # prompt tokens served by the
+                                              # radix prefix cache
     session: object = None                    # engine DecodeSession
+    _true_prompt: Optional[tuple] = None      # memoized unpadded tokens
 
     @property
     def done(self) -> bool:
@@ -85,6 +88,16 @@ class ServingRequest:
     @property
     def prefilled(self) -> bool:
         return self.prompt_done >= self.prompt_len
+
+    def true_prompt(self) -> tuple:
+        """The unpadded prompt token ids (prefix-cache lookup key); ()
+        when the request carries no token prompt. Memoized — the
+        admission loop asks every waiting request each iteration and the
+        prompt never changes."""
+        if self._true_prompt is None:
+            self._true_prompt = () if self.prompt is None else \
+                tuple(int(t) for t in self.prompt[-self.prompt_len:])
+        return self._true_prompt
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -111,6 +124,12 @@ class ServingRequest:
     def total_tokens(self) -> int:
         """Tokens this request pins in KV: prompt + generated."""
         return self.prompt_len + self.generated
+
+    @property
+    def own_kv_tokens(self) -> int:
+        """Tokens needing KV blocks of the request's *own* (prefix-hit
+        tokens live in shared radix-node blocks)."""
+        return max(self.total_tokens - self.prefix_hit, 1)
 
     # -- SLO accounting -------------------------------------------------
     @property

@@ -37,6 +37,7 @@ import numpy as np
 from repro.core import carbon as carbon_mod
 from repro.serving.kv_cache import TieredKVCache
 from repro.serving.policy import FCFSPolicy, SchedulingPolicy
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import RequestState, ServingRequest
 
 
@@ -117,6 +118,9 @@ class ServingReport:
     jit_dispatches: int = 0             # real decode graphs launched
     stall_s: float = 0.0                # weight SSD + KV residency stalls
     overlapped_bytes: float = 0.0       # prefetched bytes that hid in time
+    prefill_steps: int = 0              # iterations that ran any prefill
+    prefill_dispatches: int = 0         # real prefill graphs launched
+    prefix_stats: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def tokens_per_s(self) -> float:
@@ -177,9 +181,15 @@ class ServingReport:
             "gco2_total": self.carbon["total_g"],
             "jit_dispatches_per_step":
                 self.jit_dispatches / max(self.decode_steps, 1),
+            "prefill_dispatches_per_step":
+                self.prefill_dispatches / max(self.prefill_steps, 1),
             "stall_s": self.stall_s,
             "overlapped_bytes": self.overlapped_bytes,
         }
+        if self.prefix_stats:
+            out["prefix_hit_rate"] = self.prefix_stats["prefix_hit_rate"]
+            out["prefix_hit_tokens"] = \
+                self.prefix_stats["prefix_hit_tokens"]
         out.update(self.slo_summary())
         if "mean_intensity_g_kwh" in self.carbon:
             out["mean_intensity_g_kwh"] = \
@@ -198,6 +208,15 @@ class ContinuousBatchScheduler:
     prefill and allows preemption mid-prefill. ``carbon_trace`` prices
     each iteration's energy at that moment's grid intensity (defaults to
     the paper's constant 820 gCO2/kWh).
+
+    ``prefix_caching=True`` (or an explicit ``prefix_cache``) turns on
+    radix-tree KV reuse: admission looks the prompt up before the KV
+    budget check (a hit shrinks the blocks the request needs of its
+    own), hit-path nodes are locked/pinned and made resident at modeled
+    transfer cost, finished prefills donate their prompt blocks back to
+    the tree, and ``free`` releases the refs. The tree shares this
+    scheduler's :class:`TieredKVCache` — cached prefixes page over the
+    same HBM→DRAM→SSD tiers as live request KV.
     """
 
     def __init__(self, engine, kv: Optional[TieredKVCache] = None, *,
@@ -207,7 +226,11 @@ class ContinuousBatchScheduler:
                  prefill_chunk: Optional[int] = None,
                  carbon_trace: Optional[
                      carbon_mod.CarbonIntensityTrace] = None,
-                 kv_prefetch: bool = True):
+                 kv_prefetch: bool = True,
+                 prefix_cache: Optional[PrefixCache] = None,
+                 prefix_caching: bool = False,
+                 prefix_capacity_tokens: int = 65536,
+                 prefix_carbon_aware: bool = False):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if prefill_chunk is not None and prefill_chunk < 1:
@@ -231,6 +254,11 @@ class ContinuousBatchScheduler:
         self.policy = policy or FCFSPolicy()
         self.prefill_chunk = prefill_chunk
         self.carbon_trace = carbon_trace
+        if prefix_cache is None and prefix_caching:
+            prefix_cache = PrefixCache(
+                kv, capacity_tokens=prefix_capacity_tokens,
+                carbon_trace=carbon_trace if prefix_carbon_aware else None)
+        self.prefix = prefix_cache
         self._t0 = 0.0                   # run()'s clock origin
 
     # ------------------------------------------------------------------
@@ -248,38 +276,70 @@ class ContinuousBatchScheduler:
         if req.state is RequestState.PREEMPTED:
             # resume: KV swaps back in (or, if prefetched ahead, pays only
             # the residual in-flight stall); prefill continues where it
-            # stopped
+            # stopped. Held prefix nodes re-pin and come resident too.
+            if self.prefix is not None:
+                self.prefix.resume(req.rid)
+                for nrid in self.prefix.node_rids(req.rid):
+                    eng.advance_clock(
+                        kv.ensure_resident(nrid, protect, now=eng.clock))
             eng.advance_clock(
                 kv.ensure_resident(req.rid, protect, now=eng.clock))
         else:
+            hit = 0
+            if self.prefix is not None and req.prompt is not None:
+                # radix lookup: lock the hit path (refs + HBM pins) and
+                # pay its residency transfers — a DRAM/SSD-parked prefix
+                # charges PCIe/NVMe seconds instead of prefill compute
+                m = self.prefix.lock(req.rid, req.true_prompt(),
+                                     now=eng.clock - self._t0)
+                hit = m.hit_tokens
+                for nrid in self.prefix.node_rids(req.rid):
+                    eng.advance_clock(
+                        kv.ensure_resident(nrid, protect, now=eng.clock))
             req.session = eng.begin_prefill(
                 req.prompt, rid=req.rid, prompt_len=req.prompt_len,
-                max_new_tokens=req.max_new_tokens)
+                max_new_tokens=req.max_new_tokens, prefix_hit=hit)
+            req.prefix_hit = req.session.prefix_hit
+            req.prompt_done = req.session.prompt_done
             req.admitted_s = eng.clock - self._t0
         req.state = RequestState.RUNNING if req.prefilled \
             else RequestState.PREFILLING
         active.append(req)
 
     def _prefill_step(self, active: List[ServingRequest]) -> tuple:
-        """One prefill chunk for every PREFILLING request; returns
-        (compute seconds, chunks charged, stall seconds, overlapped
-        bytes)."""
+        """One prefill chunk for every PREFILLING request — executed and
+        priced as a batched prefill step by the engine (stacked vmapped
+        dispatches + dispatch-group weight pricing when the engine's
+        ``prefill_bucket`` > 1). Returns (compute seconds, chunks
+        charged, stall seconds, overlapped bytes, prefill dispatches)."""
         eng, kv = self.engine, self.kv
-        compute_s, chunks, stall_s, overlapped = 0.0, 0, 0.0, 0.0
+        pf = [r for r in active if r.state is RequestState.PREFILLING]
+        if not pf:
+            return 0.0, 0, 0.0, 0.0, 0
+        before = {r.rid: r.session.prompt_done for r in pf}
+        rep = eng.prefill_step([r.session for r in pf],
+                               self.prefill_chunk)
         protect = [r.rid for r in active]
-        for r in active:
-            if r.state is not RequestState.PREFILLING:
-                continue
-            rep = eng.prefill_chunk(r.session, self.prefill_chunk)
-            eng.advance_clock(kv.extend(r.rid, rep.batch_size, protect))
+        chunks = 0
+        for r in pf:
+            delta = r.session.prompt_done - before[r.rid]
+            if delta > 0:
+                eng.advance_clock(kv.extend(r.rid, delta, protect))
+                chunks += 1
             r.prompt_done = r.session.prompt_done
-            compute_s += rep.compute_s
-            stall_s += rep.stall_s
-            overlapped += rep.overlapped_bytes
-            chunks += 1
             if r.prefilled:
                 r.state = RequestState.RUNNING
-        return compute_s, chunks, stall_s, overlapped
+                if self.prefix is not None and r.prompt is not None:
+                    # donate the freshly-computed full prompt blocks to
+                    # the radix tree (copy-on-write: ownership moves,
+                    # bytes stay put) unless carbon admission says
+                    # recompute-later is greener
+                    self.prefix.insert(
+                        r.rid, r.true_prompt(),
+                        prefix_hit=r.prefix_hit,
+                        now=eng.clock - self._t0)
+        return (rep.compute_s, chunks, rep.stall_s,
+                rep.overlapped_bytes, rep.jit_dispatches)
 
     def _prefetch_ahead(self, waiting: List[ServingRequest], now: float):
         """Predict the next step's resident set and start promoting it.
@@ -313,6 +373,10 @@ class ContinuousBatchScheduler:
             victim = self.policy.victim_order(active)[0]
             active.remove(victim)
             self.engine.advance_clock(self.kv.swap_out(victim.rid))
+            if self.prefix is not None:
+                # refs are kept (nodes can't be reclaimed) but the pins
+                # drop, so a parked request's prefix may age to DRAM/SSD
+                self.prefix.suspend(victim.rid)
             if victim.state is RequestState.PREFILLING:
                 mid += 1
             victim.state = RequestState.PREEMPTED
@@ -347,10 +411,15 @@ class ContinuousBatchScheduler:
         accountant = carbon_mod.CarbonAccountant(
             device_name=eng.device_name, ssd_active=eng.use_ssd,
             trace=self.carbon_trace)
+        # prefix counters are lifetime (the tree outlives runs); snapshot
+        # so this run's report shows per-run rates, not cumulative ones
+        prefix0 = self.prefix.stats() if self.prefix is not None else {}
         decode_steps = 0
         preemptions = 0
         mid_prefill_preemptions = 0
         prefill_chunks = 0
+        prefill_steps = 0
+        prefill_dispatches = 0
         jit_dispatches = 0
         stall_s = 0.0
         overlapped = 0.0
@@ -382,22 +451,36 @@ class ContinuousBatchScheduler:
                 continue
             # admit in policy order up to max_batch; stop when the KV
             # budget says no (carbon-held requests are skipped, not
-            # blocking the ones behind them)
+            # blocking the ones behind them). A prefix-cache lookup runs
+            # *before* the budget check: hit tokens live in shared radix
+            # blocks, so only the suffix needs blocks of the request's
+            # own
             for req in self.policy.admission_order(waiting, now):
                 if len(active) >= self.max_batch:
                     break
                 if not self.policy.may_start(req, now):
                     continue
-                if not kv.can_admit(max(req.total_tokens, 1),
+                need = max(req.total_tokens, 1)
+                if self.prefix is not None and req.prompt is not None:
+                    if req.state is RequestState.PREEMPTED:
+                        need = req.own_kv_tokens
+                    else:
+                        need = max(req.total_tokens - self.prefix.match(
+                            req.true_prompt()).hit_tokens, 1)
+                if not kv.can_admit(need,
                                     [r.rid for r in active]) and active:
                     break
                 waiting.remove(req)
                 self._admit(req, active)
             # one prefill chunk per prefilling request, then resolve KV
             # pressure (possibly preempting mid-prefill), then decode
-            comp, chunks, pf_stall, pf_overlap = self._prefill_step(active)
+            comp, chunks, pf_stall, pf_overlap, pf_disp = \
+                self._prefill_step(active)
             iter_compute += comp
             prefill_chunks += chunks
+            if chunks:
+                prefill_steps += 1
+            prefill_dispatches += pf_disp
             stall_s += pf_stall
             overlapped += pf_overlap
             n, mid = self._preempt(active, waiting)
@@ -425,6 +508,9 @@ class ContinuousBatchScheduler:
                     if r.done:
                         r.state = RequestState.FINISHED
                         r.finish_s = eng.clock - clock_start
+                        if self.prefix is not None:
+                            self.prefix.release(
+                                r.rid, now=eng.clock - clock_start)
                         kv.free(r.rid)
                         finished.append(r)
                         active.remove(r)
@@ -452,6 +538,15 @@ class ContinuousBatchScheduler:
                 "weight_overlapped_bytes": pre.overlapped_bytes,
             }
         kv_stats = kv.stats()
+        prefix_stats = {}
+        if self.prefix is not None:
+            cur = self.prefix.stats()
+            gauges = {"prefix_nodes", "prefix_cached_tokens"}
+            prefix_stats = {k: v if k in gauges else v - prefix0.get(k, 0)
+                            for k, v in cur.items()}
+            prefix_stats["prefix_hit_rate"] = \
+                prefix_stats["prefix_hit_tokens"] \
+                / max(prefix_stats["prefix_lookup_tokens"], 1)
         return ServingReport(
             requests=finished, modeled_span_s=span,
             total_tokens=total_tokens, decode_steps=decode_steps,
@@ -462,4 +557,7 @@ class ContinuousBatchScheduler:
             jit_dispatches=jit_dispatches,
             stall_s=stall_s + kv_stats["kv_stall_s"],
             overlapped_bytes=overlapped
-            + kv_stats["kv_prefetch_overlap_bytes"])
+            + kv_stats["kv_prefetch_overlap_bytes"],
+            prefill_steps=prefill_steps,
+            prefill_dispatches=prefill_dispatches,
+            prefix_stats=prefix_stats)

@@ -5,11 +5,17 @@
 separated by idle gaps (the flash-crowd model that makes scheduling
 policies matter — under a burst the queue is deep and admission *order*
 decides who meets their TTFT); ``closed_trace`` releases everything at
-t=0 (the offline-batch model). Traces are plain event lists so recorded
-production traces can be replayed through ``requests_from_trace``
-unchanged. Events may carry an ``slo_class`` naming an entry of
-``repro.serving.request.SLO_CLASSES``; ``assign_slo_classes`` samples a
-mix over an existing trace. All times are modeled-clock seconds.
+t=0 (the offline-batch model); ``shared_prefix_trace`` generates
+chat-style conversations whose prompts share token-ID prefixes (system
+prompts reused across requests, multi-turn histories re-sent every
+turn) — the traffic that makes the radix prefix cache matter. Traces
+are plain event lists so recorded production traces can be replayed
+through ``requests_from_trace`` unchanged. Events may carry an
+``slo_class`` naming an entry of ``repro.serving.request.SLO_CLASSES``;
+``assign_slo_classes`` samples a mix over an existing trace. Events may
+also carry explicit ``prompt_tokens`` (shared-prefix traces must pin
+the actual token ids, not just lengths, for prefixes to collide). All
+times are modeled-clock seconds.
 """
 from __future__ import annotations
 
@@ -28,6 +34,8 @@ class ArrivalEvent:
     prompt_len: int
     max_new_tokens: int
     slo_class: Optional[str] = None    # key into SLO_CLASSES, or None
+    prompt_tokens: Optional[tuple] = None   # explicit token ids (prefix
+                                            # workloads); len == prompt_len
 
 
 def poisson_trace(n: int, rate_rps: float, *, seed: int = 0,
@@ -76,6 +84,56 @@ def closed_trace(n: int, *, prompt_len: int = 32,
                          max_new_tokens=gen_len) for i in range(n)]
 
 
+def shared_prefix_trace(n: int, *, rate_rps: float = 2.0,
+                        num_groups: int = 4, prefix_len: int = 64,
+                        reuse_ratio: float = 0.7, turns: int = 1,
+                        think_time_s: float = 10.0,
+                        suffix_len: Tuple[int, int] = (8, 24),
+                        gen_len: Tuple[int, int] = (16, 32),
+                        vocab_size: int = 50000,
+                        seed: int = 0) -> List[ArrivalEvent]:
+    """Chat traffic with realistic prefix reuse.
+
+    Conversations arrive as a Poisson process at ``rate_rps``. With
+    probability ``reuse_ratio`` a conversation opens with one of
+    ``num_groups`` shared system prompts (``prefix_len`` tokens,
+    deterministic per group — the "hot prefix" every chat product has);
+    otherwise its prefix is unique. Each conversation runs ``turns``
+    turns: turn *t*'s prompt is the full turn *t-1* prompt plus a
+    simulated assistant response plus a fresh user suffix, arriving
+    after an exponential think-time gap — so multi-turn requests re-send
+    (and can reuse) their entire history, the second big sharing pattern
+    prefix caches exploit. Events pin explicit ``prompt_tokens`` so
+    prefixes actually collide byte-for-byte."""
+    rng = np.random.default_rng(seed)
+    group_prefix = [rng.integers(0, vocab_size, prefix_len).tolist()
+                    for _ in range(num_groups)]
+    events = []
+    t, rid = 0.0, 0
+    while rid < n:
+        t += float(rng.exponential(1.0 / rate_rps))
+        if rng.random() < reuse_ratio:
+            hist = list(group_prefix[int(rng.integers(num_groups))])
+        else:
+            hist = rng.integers(0, vocab_size, prefix_len).tolist()
+        arr = t
+        for _ in range(turns):
+            if rid >= n:
+                break
+            sfx = int(rng.integers(suffix_len[0], suffix_len[1] + 1))
+            hist = hist + rng.integers(0, vocab_size, sfx).tolist()
+            gl = int(rng.integers(gen_len[0], gen_len[1] + 1))
+            events.append(ArrivalEvent(
+                rid=rid, arrival_s=arr, prompt_len=len(hist),
+                max_new_tokens=gl, prompt_tokens=tuple(hist)))
+            rid += 1
+            # next turn re-sends history + a simulated response
+            hist = hist + rng.integers(0, vocab_size, gl).tolist()
+            arr += float(rng.exponential(think_time_s))
+    events.sort(key=lambda e: e.arrival_s)
+    return [dataclasses.replace(e, rid=i) for i, e in enumerate(events)]
+
+
 def assign_slo_classes(events: Sequence[ArrivalEvent],
                        mix: Dict[str, float], *,
                        seed: int = 0) -> List[ArrivalEvent]:
@@ -99,15 +157,22 @@ def requests_from_trace(events: Sequence[ArrivalEvent], *,
     prompts (left-padded to the trace's max length so the real-tiny engine
     jits one prefill shape). ``prompt_len`` stays the *true* length so
     modeled prefill compute, KV footprint and admission checks are not
-    skewed toward the longest prompt in the trace. Events with an
+    skewed toward the longest prompt in the trace. Events carrying
+    explicit ``prompt_tokens`` (shared-prefix traces) keep those ids
+    verbatim — with or without ``vocab_size`` — so prefix-cache lookups
+    see colliding prefixes even on analytic engines. Events with an
     ``slo_class`` get the matching :class:`SLOSpec` attached."""
     rng = np.random.default_rng(seed)
     pad_to = max((e.prompt_len for e in events), default=0)
     out = []
     for e in events:
-        prompt = None
-        if vocab_size is not None:
+        toks = None
+        if e.prompt_tokens is not None:
+            toks = np.asarray(e.prompt_tokens, dtype=np.int64)
+        elif vocab_size is not None:
             toks = rng.integers(0, vocab_size, e.prompt_len)
+        prompt = None
+        if toks is not None:
             prompt = np.pad(toks, (pad_to - e.prompt_len, 0)).astype(np.int32)
         out.append(ServingRequest(
             rid=e.rid, prompt_len=e.prompt_len,

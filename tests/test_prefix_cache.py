@@ -1,0 +1,441 @@
+"""Radix-tree prefix cache + batched prefill + TieredKVCache edge cases.
+
+Acceptance properties:
+
+* radix match/insert/split bookkeeping is exact (block granularity,
+  full-edge matching, copy-on-write splits partition block ownership);
+* refcounted (locked) prefix blocks are never evicted from HBM while a
+  request reads them; released nodes age out to DRAM/SSD and come back
+  via ``ensure_resident`` at modeled transfer cost;
+* carbon-aware admission skips caching exactly when the grid is dirty
+  now and a cleaner window is coming (recompute-later-is-greener);
+* TieredKVCache survives the patterns the prefix cache leans on:
+  ``free()`` with a prefetch in flight, ``extend()`` across a demoted
+  block, ``adopt_blocks`` conservation;
+* real-tiny serving emits byte-identical tokens with the prefix cache
+  and batched prefill on or off, while batched prefill launches fewer
+  jit prefill graphs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonIntensityTrace
+from repro.core.cache.preloader import PrefetchEngine
+from repro.core.engine import M2CacheEngine
+from repro.serving import (ContinuousBatchScheduler, PrefixCache,
+                           requests_from_trace, shared_prefix_trace)
+from repro.serving.kv_cache import TieredKVCache
+
+
+def _kv(tmp_path, *, hbm_blocks=8, dram_blocks=8, block_tokens=4,
+        bytes_per_token=256.0, prefetch=None):
+    bb = block_tokens * bytes_per_token
+    return TieredKVCache(
+        num_layers=2, d_model=8,
+        hbm_capacity_bytes=hbm_blocks * bb,
+        dram_capacity_bytes=dram_blocks * bb,
+        ssd_dir=str(tmp_path / "kv"), block_tokens=block_tokens,
+        bytes_per_token=bytes_per_token, max_file_bytes=int(bb),
+        prefetch=prefetch)
+
+
+def _toks(*vals):
+    return tuple(vals)
+
+
+# ---------------------------------------------------------------------------
+# TieredKVCache edge cases the prefix cache leans on
+
+
+def test_kv_free_with_prefetch_in_flight(tmp_path):
+    """free() while an async promotion is mid-flight must cancel the
+    transfer and leave no stale in-flight record or block state."""
+    pf = PrefetchEngine()
+    kv = _kv(tmp_path, hbm_blocks=2, dram_blocks=4, prefetch=pf)
+    kv.alloc(0, 8)
+    kv.swap_out(0)                       # both blocks parked in DRAM
+    kv.prefetch_resident(0, now=0.0)     # async DRAM->HBM promotions
+    bids = list(kv.table[0])
+    assert all(pf.in_flight(("kv", b)) for b in bids)
+    kv.free(0)
+    assert not any(pf.in_flight(("kv", b)) for b in bids)
+    assert kv.hbm_used == 0 and not kv.blocks and not kv.table
+    # a later unrelated wait must not stall on the dead transfers
+    assert pf.wait(("kv", bids[0]), now=0.0) == 0.0
+
+
+def test_kv_extend_across_demoted_block(tmp_path):
+    """extend() of a request whose earlier blocks were demoted grows new
+    HBM blocks without disturbing the parked ones; ensure_resident then
+    promotes the whole table."""
+    kv = _kv(tmp_path, hbm_blocks=4, dram_blocks=4)
+    kv.alloc(0, 8)                       # 2 blocks
+    kv.swap_out(0)                       # -> DRAM
+    dt = kv.extend(0, 6)                 # 14 tokens -> 2 more blocks
+    assert dt >= 0.0
+    tiers = [kv.blocks[b].tier for b in kv.table[0]]
+    assert tiers == ["dram", "dram", "hbm", "hbm"]
+    assert kv.tokens[0] == 14
+    dt = kv.ensure_resident(0, protect=[0])
+    assert dt > 0.0
+    assert all(kv.blocks[b].tier == "hbm" for b in kv.table[0])
+
+
+def test_kv_adopt_blocks_conserves_tokens_and_ownership(tmp_path):
+    kv = _kv(tmp_path)
+    kv.alloc(0, 13)                      # 4 blocks, 13 tokens
+    kv.adopt_blocks(0, -5, 2, start_block=1)
+    assert [kv.blocks[b].rid for b in kv.table[0]] == [0, 0]
+    assert [kv.blocks[b].rid for b in kv.table[-5]] == [-5, -5]
+    assert kv.tokens[0] == 5 and kv.tokens[-5] == 8
+    assert len(kv.blocks) == 4           # no block created or lost
+    kv.free(0)
+    assert -5 in kv.table and len(kv.table[-5]) == 2
+    kv.free(-5)
+    assert not kv.blocks
+
+
+def test_kv_pinned_rids_survive_eviction_pressure(tmp_path):
+    """Pinned (refcounted prefix) blocks must not be demoted even when
+    unprotected requests need the space; unpinning re-enables LRU."""
+    kv = _kv(tmp_path, hbm_blocks=2, dram_blocks=4)
+    kv.alloc(-2, 8)                      # node blocks fill HBM
+    kv.pin(-2)
+    kv.alloc(1, 8, protect=[1])          # wants 2 blocks, none evictable
+    assert all(kv.blocks[b].tier == "hbm" for b in kv.table[-2])
+    assert kv.over_budget()              # scheduler resolves by preempting
+    assert not kv.can_admit(4, protect=[])   # pinned counts as protected
+    kv.free(1)
+    kv.unpin(-2)
+    kv.alloc(2, 8, protect=[2])          # now the node blocks may demote
+    assert all(kv.blocks[b].tier != "hbm" for b in kv.table[-2])
+
+
+# ---------------------------------------------------------------------------
+# radix tree bookkeeping (pure python + tiny TieredKVCache)
+
+
+def _prefix(tmp_path, **kw):
+    kv = _kv(tmp_path, hbm_blocks=64, dram_blocks=64)
+    return kv, PrefixCache(kv, **kw)
+
+
+def _simulate_prefill(kv, rid, tokens, hit):
+    """What the scheduler does between lock() and insert(): the request
+    allocates its own blocks for the un-hit suffix."""
+    kv.extend(rid, len(tokens) - hit)
+
+
+def test_radix_match_insert_release_cycle(tmp_path):
+    kv, pc = _prefix(tmp_path)
+    bt = kv.block_tokens                 # 4
+    p1 = _toks(*range(10))               # blocks: (0..3) (4..7), tail 8,9
+    m = pc.lock(0, p1)
+    assert m.hit_tokens == 0
+    _simulate_prefill(kv, 0, p1, 0)
+    assert pc.insert(0, p1, prefix_hit=0) == 8     # 2 whole blocks donated
+    assert pc.nodes == 1 and pc.cached_tokens == 8
+    # request 0 still owns its tail block; the tree owns the donated rid
+    node_rid = pc.node_rids(0)[-1]
+    assert node_rid < 0 and len(kv.table[node_rid]) == 2
+    assert kv.tokens[0] == 2
+    # same-prefix request hits both blocks (full-edge match)
+    m2 = pc.lock(1, _toks(*range(10)))
+    assert m2.hit_tokens == 8
+    assert node_rid in pc.node_rids(1)
+    # node pinned while locked, unpinned when all lockers release
+    assert node_rid in kv.pinned
+    pc.release(0)
+    assert node_rid in kv.pinned
+    pc.release(1)
+    assert node_rid not in kv.pinned
+    assert pc.stats()["prefix_hit_requests"] == 1
+
+
+def test_radix_full_prompt_match_capped_one_block_short(tmp_path):
+    """A prompt fully equal to a cached prefix must leave >= 1 token to
+    recompute (the engine needs last-position logits)."""
+    kv, pc = _prefix(tmp_path)
+    p = _toks(*range(8))                 # exactly 2 blocks
+    pc.lock(0, p)
+    _simulate_prefill(kv, 0, p, 0)
+    pc.insert(0, p, prefix_hit=0)        # only block 1 insertable (cap)
+    assert pc.cached_tokens == 4
+    m = pc.lock(1, p)
+    assert m.hit_tokens == 4             # never the whole prompt
+
+
+def test_radix_copy_on_write_split(tmp_path):
+    """Divergence inside an edge forks the node at the matched block
+    boundary, partitioning its KV blocks between head and tail."""
+    kv, pc = _prefix(tmp_path)
+    pa = _toks(*range(16), 100)          # 4 whole blocks + 1 recompute tok
+    pc.lock(0, pa)
+    _simulate_prefill(kv, 0, pa, 0)
+    pc.insert(0, pa, prefix_hit=0)       # one node, 4 blocks (16 tokens)
+    assert pc.nodes == 1 and pc.cached_tokens == 16
+    head_rid = pc.node_rids(0)[-1]
+    # second prompt shares 2 blocks then diverges
+    pb = _toks(*range(8), 50, 51, 52, 53, 60, 61, 62, 63, 200)
+    m = pc.lock(1, pb)
+    assert m.hit_tokens == 0             # partial-edge overlap: no hit yet
+    _simulate_prefill(kv, 1, pb, 0)
+    pc.insert(1, pb, prefix_hit=0)
+    # split: head(2 blocks) + old tail(2) + new sibling(2)
+    assert pc.splits == 1 and pc.nodes == 3
+    assert len(kv.table[head_rid]) == 2        # head kept its first blocks
+    assert pc.cached_tokens == 24
+    # request 0 (still active) must now hold both halves of its old node
+    rids0 = pc.node_rids(0)
+    assert head_rid in rids0 and len(rids0) == 2
+    pc.release(0)
+    pc.release(1)
+    # after the split, the shared head is independently matchable
+    m3 = pc.lock(2, _toks(*range(8), 77))
+    assert m3.hit_tokens == 8
+    pc.release(2)
+
+
+def test_radix_multi_turn_chain_extends_tree(tmp_path):
+    """Turn 2 re-sends turn 1's prompt + response: it must hit the whole
+    turn-1 prefix and donate only the new suffix blocks."""
+    kv, pc = _prefix(tmp_path)
+    t1 = _toks(*range(9))                # 2 whole blocks + 1
+    pc.lock(0, t1)
+    _simulate_prefill(kv, 0, t1, 0)
+    pc.insert(0, t1, prefix_hit=0)
+    pc.release(0)
+    t2 = t1 + _toks(*range(20, 28))      # history + response + new msg
+    m = pc.lock(1, t2)
+    assert m.hit_tokens == 8
+    _simulate_prefill(kv, 1, t2, m.hit_tokens)
+    donated = pc.insert(1, t2, prefix_hit=m.hit_tokens)
+    assert donated == 8                  # blocks (8..11), (12..15)
+    assert pc.cached_tokens == 16 and pc.nodes == 2
+    m3 = pc.lock(2, t2)
+    assert m3.hit_tokens == 16
+    for rid in (1, 2):
+        pc.release(rid)
+
+
+def test_radix_lru_reclaim_respects_locks(tmp_path):
+    kv, pc = _prefix(tmp_path, capacity_tokens=16)
+    prompts = [_toks(*(100 * g + i for i in range(9)))
+               for g in range(3)]        # 3 disjoint 2-block prefixes
+    for rid, p in enumerate(prompts):
+        pc.lock(rid, p, now=float(rid))
+        _simulate_prefill(kv, rid, p, 0)
+        pc.insert(rid, p, prefix_hit=0, now=float(rid))
+    # all three donors still locked: over budget but nothing reclaimable
+    assert pc.cached_tokens == 24 and pc.reclaimed_tokens == 0
+    pc.release(0, now=10.0)
+    pc.release(1, now=11.0)
+    pc.lock(9, prompts[0], now=12.0)     # re-lock prefix 0 (hot again)
+    _simulate_prefill(kv, 9, prompts[0], 8)
+    pc.insert(9, prompts[0], prefix_hit=8, now=12.0)  # no-op, triggers
+    pc._reclaim(now=12.0)
+    # prefix 1 (unlocked, coldest) went; locked 0 and 2 survive
+    assert pc.cached_tokens == 16
+    assert pc.lock(10, prompts[1], now=13.0).hit_tokens == 0
+    assert pc.lock(11, prompts[2], now=13.0).hit_tokens == 8
+
+
+def test_radix_suspended_holders_block_reclaim_and_split_propagates(
+        tmp_path):
+    """A preempted request keeps *holding* its path nodes: reclaim must
+    never free them (even unpinned), and a copy-on-write split while it
+    is parked must hand it the tail node so resume re-pins both halves."""
+    kv, pc = _prefix(tmp_path, capacity_tokens=8)
+    pa = _toks(*range(16), 100)
+    pc.lock(0, pa)
+    _simulate_prefill(kv, 0, pa, 0)
+    pc.insert(0, pa, prefix_hit=0)           # 16 cached tokens (1 node)
+    node_rid = pc.node_rids(0)[-1]
+    pc.suspend(0)                            # preempted: unpinned, held
+    assert node_rid not in kv.pinned
+    # another request's insert pushes the tree over capacity
+    pb = _toks(*(200 + i for i in range(9)))
+    pc.lock(1, pb)
+    _simulate_prefill(kv, 1, pb, 0)
+    pc.insert(1, pb, prefix_hit=0)
+    # over budget (24 > 8) but both nodes are held -> nothing reclaimed
+    assert pc.reclaimed_tokens == 0
+    assert node_rid in kv.table              # parked prefix intact
+    # a diverging insert splits the parked request's node mid-edge
+    pcq = _toks(*range(8), 70, 71, 72, 73, 300)
+    pc.lock(2, pcq)
+    _simulate_prefill(kv, 2, pcq, 0)
+    pc.insert(2, pcq, prefix_hit=0)
+    assert pc.splits == 1
+    assert len(pc.node_rids(0)) == 2         # parked rid holds both halves
+    pc.resume(0)                             # both halves re-pin
+    assert all(r in kv.pinned for r in pc.node_rids(0))
+    for rid in (0, 1, 2):
+        pc.release(rid)
+    # only now is the tree reclaimable down to capacity
+    pc._reclaim(now=1.0)
+    assert pc.cached_tokens <= 8
+
+
+def test_radix_carbon_admission_guardrail(tmp_path):
+    """Dirty grid + a clean window coming -> skip caching; dirty grid
+    that never improves -> cache anyway (recompute-later is not
+    greener); clean grid -> cache."""
+    square = CarbonIntensityTrace.square()       # alternates dirty/clean
+    kv, pc = _prefix(tmp_path, carbon_trace=square,
+                     carbon_threshold_g_kwh=300.0, defer_horizon_s=1e6)
+    dirty_now = next(
+        t for t in np.arange(0.0, 1e5, 100.0)
+        if square.intensity_at(float(t)) > 300.0)
+    p = _toks(*range(9))
+    pc.lock(0, p, now=float(dirty_now))
+    _simulate_prefill(kv, 0, p, 0)
+    assert pc.insert(0, p, prefix_hit=0, now=float(dirty_now)) == 0
+    assert pc.insert_skips_carbon == 1
+    pc.release(0)
+    clean_now = next(
+        t for t in np.arange(0.0, 1e5, 100.0)
+        if square.intensity_at(float(t)) <= 300.0)
+    pc.lock(1, p, now=float(clean_now))
+    _simulate_prefill(kv, 1, p, 0)
+    assert pc.insert(1, p, prefix_hit=0, now=float(clean_now)) == 8
+    pc.release(1)
+    # constant-dirty grid: no cleaner window exists, so caching wins
+    kv2 = _kv(tmp_path / "d", hbm_blocks=64, dram_blocks=64)
+    pc2 = PrefixCache(kv2, carbon_trace=CarbonIntensityTrace.constant(),
+                      carbon_threshold_g_kwh=300.0)
+    pc2.lock(0, p)
+    kv2.extend(0, len(p))
+    assert pc2.insert(0, p, prefix_hit=0) == 8
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration (analytic engine: pure modeled clock)
+
+
+def _analytic_run(tmp_path, tag, events, *, prefix):
+    eng = M2CacheEngine(paper_model="llama-7b", dram_capacity_gb=6.0,
+                        ssd_dir=str(tmp_path / tag))
+    sched = ContinuousBatchScheduler(eng, max_batch=4, prefill_chunk=8,
+                                     prefix_caching=prefix)
+    first = sched.run(requests_from_trace(events))
+    second = sched.run(requests_from_trace(events))
+    return first, second
+
+
+def test_scheduler_prefix_reuse_analytic(tmp_path):
+    """Shared-prefix traffic through the analytic engine: the steady
+    state (second pass over the trace) must hit the tree, skip prefill
+    clock, and finish everyone — with a shorter span than no-reuse."""
+    events = shared_prefix_trace(8, rate_rps=1e4, num_groups=2,
+                                 prefix_len=48, reuse_ratio=1.0,
+                                 suffix_len=(4, 8), gen_len=(4, 6),
+                                 seed=0)
+    off1, off2 = _analytic_run(tmp_path, "off", events, prefix=False)
+    on1, on2 = _analytic_run(tmp_path, "on", events, prefix=True)
+    for rep in (off1, off2, on1, on2):
+        assert len(rep.requests) == 8
+        assert all(r.generated == r.max_new_tokens for r in rep.requests)
+    assert on2.prefix_stats["prefix_hit_tokens"] > 0
+    assert on2.summary()["prefix_hit_rate"] > 0.3
+    assert on2.modeled_span_s < off2.modeled_span_s
+    assert on2.summary()["gco2_per_request"] < \
+        off2.summary()["gco2_per_request"]
+    # hit requests carry their hit and needed fewer own-KV tokens
+    assert any(r.prefix_hit > 0 for r in on2.requests)
+
+
+def test_scheduler_prefix_survives_preemption(tmp_path):
+    """Tight KV budget: preempted lockers unpin (their prefix may age
+    out of HBM) but keep refs, and everyone still finishes."""
+    events = shared_prefix_trace(10, rate_rps=1e4, num_groups=1,
+                                 prefix_len=48, reuse_ratio=1.0,
+                                 suffix_len=(4, 8), gen_len=(6, 8),
+                                 seed=1)
+    eng = M2CacheEngine(paper_model="llama-7b", dram_capacity_gb=6.0,
+                        ssd_dir=str(tmp_path / "tight"))
+    sched = ContinuousBatchScheduler(eng, max_batch=8, hbm_kv_gb=0.05,
+                                     dram_kv_gb=0.02, prefill_chunk=8,
+                                     prefix_caching=True)
+    rep = sched.run(requests_from_trace(events))
+    rep2 = sched.run(requests_from_trace(events))
+    assert len(rep.requests) == 10 and len(rep2.requests) == 10
+    assert rep.preemptions + rep2.preemptions > 0
+    assert sched.prefix.stats()["prefix_hit_tokens"] > 0
+    assert not sched.prefix._locked        # all refs released at finish
+
+
+# ---------------------------------------------------------------------------
+# real-tiny: byte-identical tokens + batched prefill dispatch counts
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config("qwen2.5-14b", tiny=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32,
+                           m2=True)
+    return cfg, params
+
+
+def _real_events(cfg, n=6, seed=0):
+    import dataclasses
+    events = shared_prefix_trace(n, rate_rps=1e6, num_groups=2,
+                                 prefix_len=24, reuse_ratio=0.8,
+                                 suffix_len=(3, 6), gen_len=(3, 5),
+                                 vocab_size=cfg.vocab_size, seed=seed)
+    return [dataclasses.replace(e, arrival_s=0.0) for e in events]
+
+
+def _real_run(tmp_path, tag, cfg, params, events, *, prefix, bucket):
+    eng = M2CacheEngine(cfg=cfg, params=params, dram_capacity_gb=0.5,
+                        ssd_dir=str(tmp_path / tag), prefill_bucket=bucket)
+    sched = ContinuousBatchScheduler(eng, max_batch=4, prefill_chunk=8,
+                                     prefix_caching=prefix)
+    reps = [sched.run(requests_from_trace(events,
+                                          vocab_size=cfg.vocab_size))
+            for _ in range(2)]
+    toks = [{r.rid: list(r.session.tokens) for r in rep.requests}
+            for rep in reps]
+    return reps, toks, sched
+
+
+@pytest.mark.slow
+def test_prefix_cache_tokens_identical_real(tmp_path, tiny_model):
+    """Acceptance: real-tiny decode emits byte-identical tokens with the
+    prefix cache on or off, across both the cold and the warmed pass."""
+    cfg, params = tiny_model
+    events = _real_events(cfg)
+    _, toks_off, _ = _real_run(tmp_path, "off", cfg, params, events,
+                               prefix=False, bucket=1)
+    reps_on, toks_on, sched = _real_run(tmp_path, "on", cfg, params,
+                                        events, prefix=True, bucket=1)
+    assert toks_off == toks_on
+    assert sched.prefix.stats()["prefix_hit_tokens"] > 0
+    assert reps_on[1].summary()["prefix_hit_rate"] > 0
+    # steady state is faster than the cold pass of the same system
+    assert reps_on[1].modeled_span_s < reps_on[0].modeled_span_s
+
+
+@pytest.mark.slow
+def test_batched_prefill_tokens_and_dispatches(tmp_path, tiny_model):
+    """Stacked vmapped prefill must not change a single token and must
+    launch fewer jit prefill graphs than one-per-session."""
+    cfg, params = tiny_model
+    events = _real_events(cfg, seed=2)
+    reps_ps, toks_ps, _ = _real_run(tmp_path, "ps", cfg, params, events,
+                                    prefix=True, bucket=1)
+    reps_bp, toks_bp, _ = _real_run(tmp_path, "bp", cfg, params, events,
+                                    prefix=True, bucket=8)
+    assert toks_ps == toks_bp
+    ps_disp = sum(r.prefill_dispatches for r in reps_ps)
+    bp_disp = sum(r.prefill_dispatches for r in reps_bp)
+    assert bp_disp < ps_disp
+    # per-session launches one graph per request
+    assert ps_disp == sum(len(r.requests) for r in reps_ps)
+    # batched pricing is never slower
+    assert sum(r.modeled_span_s for r in reps_bp) <= \
+        sum(r.modeled_span_s for r in reps_ps) * (1 + 1e-9)
