@@ -45,7 +45,7 @@ def run():
     per_neuron = (time.perf_counter() - t0) / 3
     t0 = time.perf_counter()
     for _ in range(3):
-        unit2 = np.take(bank, idx, axis=0)    # one batched gather
+        np.take(bank, idx, axis=0)            # one batched gather
     batched = (time.perf_counter() - t0) / 3
     rows.append(row("fig5.per_neuron_copies", per_neuron * 1e6,
                     f"{k} x {d * 2}B copies"))

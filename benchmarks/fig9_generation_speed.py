@@ -5,7 +5,7 @@ process)."""
 import tempfile
 
 from benchmarks.common import row
-from repro.core.engine import PAPER_MODELS, M2CacheEngine
+from repro.core.engine import M2CacheEngine
 
 
 def run(gen_len: int = 12):

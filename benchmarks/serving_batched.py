@@ -89,10 +89,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen-len", type=int, default=12)
     ap.add_argument("--dram-gb", type=float, default=0.5)
-    ap.add_argument("--hbm-kv-gb", type=float, default=2.2e-4,
+    ap.add_argument("--hbm-kv-gb", type=float, default=1.1e-4,
                     help="tight KV budget -> preempt/resume traffic the "
                          "prefetcher can overlap")
-    ap.add_argument("--dram-kv-gb", type=float, default=1e-4)
+    ap.add_argument("--dram-kv-gb", type=float, default=5e-5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: BENCH_serving.json "

@@ -1,0 +1,184 @@
+"""Warm-restart benchmark: the flash-persistent radix prefix tree.
+
+A server lifetime ends (deploy, crash, scale-down) and every cached
+prompt prefix dies with it — unless the radix tree is persisted. This
+benchmark serves one chat-style shared-prefix burst through three
+server lifetimes (real tiny model: actual jit'd block-chunked prefill
+and decode, modeled transfer clock):
+
+  lifetime-1     — fresh server, prefix cache on: every group's first
+                   prompt prefills from scratch and donates its blocks;
+                   at exit the tree (structure + the actual KV payload
+                   bytes of every node block) is saved to flash;
+  cold-restart   — a fresh server with no persistence serves the same
+                   burst: the tree starts empty, so first-in-group
+                   prompts pay full prefill again (the pre-persistence
+                   restart behaviour);
+  warm-restart   — a fresh server loads the saved tree: every node
+                   starts *SSD-resident*, so first hits pay real NVMe
+                   reads + modeled PCIe promotion seconds instead of
+                   prefill compute, and restored blocks are device_put
+                   into the admitted requests' caches (suffix-only
+                   prefill).
+
+Tokens must be byte-identical across all three lifetimes — KV that went
+through flash files and a process boundary decodes exactly like KV that
+never left the device pytree. The warm restart must report a nonzero
+first-pass prefix hit rate, beat the cold restart's, and win on TTFT.
+
+Emits ``BENCH_restart.json`` next to this file (same pattern as
+``BENCH_prefix.json``) so the perf trajectory is tracked across PRs.
+
+  PYTHONPATH=src python benchmarks/serving_restart.py [--requests 10]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import shutil
+import tempfile
+
+from repro.core.engine import M2CacheEngine
+from repro.serving import (ContinuousBatchScheduler, requests_from_trace,
+                           shared_prefix_trace)
+
+
+def build_events(args, cfg):
+    events = shared_prefix_trace(
+        args.requests, rate_rps=1e6, num_groups=args.prefix_groups,
+        prefix_len=args.prefix_len, reuse_ratio=args.reuse,
+        turns=args.turns, suffix_len=(3, 6),
+        gen_len=(args.gen_len - 2, args.gen_len + 1),
+        vocab_size=cfg.vocab_size, seed=args.seed)
+    # closed burst: maximum queueing pressure, where warm prefixes pay off
+    return [dataclasses.replace(e, arrival_s=0.0) for e in events]
+
+
+def run_lifetime(name, args, cfg, params, events, *, ssd_dir,
+                 load_dir=None, save_dir=None):
+    """One server lifetime: fresh engine + scheduler + (empty or loaded)
+    prefix tree, one pass over the trace."""
+    eng = M2CacheEngine(cfg=cfg, params=params,
+                        dram_capacity_gb=args.dram_gb,
+                        prefill_bucket=args.prefill_bucket,
+                        ssd_dir=ssd_dir, seed=args.seed)
+    sched = ContinuousBatchScheduler(
+        eng, max_batch=args.max_batch, prefill_chunk=args.prefill_chunk,
+        hbm_kv_gb=args.hbm_kv_gb, dram_kv_gb=args.dram_kv_gb,
+        prefix_caching=True)
+    loaded = sched.prefix.load(load_dir) if load_dir else None
+    rep = sched.run(requests_from_trace(events,
+                                        vocab_size=cfg.vocab_size))
+    saved = sched.prefix.save(save_dir) if save_dir else None
+    s = rep.summary()
+    row = {
+        "tokens_per_s": s["tokens_per_s"],
+        "modeled_span_s": rep.modeled_span_s,
+        "p50_ttft_s": s["p50_ttft_s"],
+        "gco2_per_request": s["gco2_per_request"],
+        "prefix_hit_rate": rep.prefix_stats.get("prefix_hit_rate", 0.0),
+        "prefix_hit_tokens": rep.prefix_stats.get("prefix_hit_tokens", 0),
+        "prefill_dispatches": rep.prefill_dispatches,
+        "restored_tokens": eng.prefix_restored_tokens,
+        "kv_ssd_read_bytes": rep.kv_stats["kv_ssd_read_bytes"],
+        "loaded": loaded, "saved": saved,
+        "tokens": {r.rid: list(r.session.tokens) for r in rep.requests},
+    }
+    print(f"{name:13s} tok/s={row['tokens_per_s']:9.0f} "
+          f"ttft={row['p50_ttft_s'] * 1e3:7.3f}ms "
+          f"hit={row['prefix_hit_rate']:4.2f} "
+          f"restored={row['restored_tokens']:4d} "
+          f"disp={row['prefill_dispatches']:3d} "
+          f"gCO2/req={row['gco2_per_request']:.2e}")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prefix-groups", type=int, default=2)
+    ap.add_argument("--prefix-len", type=int, default=48,
+                    help="shared system-prompt tokens per group")
+    ap.add_argument("--reuse", type=float, default=0.9,
+                    help="fraction of conversations on a shared prefix")
+    ap.add_argument("--turns", type=int, default=1)
+    ap.add_argument("--gen-len", type=int, default=7)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--prefill-bucket", type=int, default=8)
+    ap.add_argument("--dram-gb", type=float, default=0.5)
+    ap.add_argument("--hbm-kv-gb", type=float, default=0.25)
+    ap.add_argument("--dram-kv-gb", type=float, default=1.0)
+    ap.add_argument("--min-warm-hit-rate", type=float, default=0.3,
+                    help="required first-pass hit rate after warm restart")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_restart.json "
+                         "next to this script)")
+    args = ap.parse_args()
+    if args.requests < 8:
+        ap.error("acceptance regime is >= 8 concurrent requests")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config(args.arch, tiny=True)
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg,
+                           dtype=jnp.float32, m2=True)
+    events = build_events(args, cfg)
+
+    work = tempfile.mkdtemp(prefix="m2cache_restart_")
+    persist = pathlib.Path(work) / "prefix_tree"
+    try:
+        rows = {
+            "lifetime1": run_lifetime(
+                "lifetime-1", args, cfg, params, events,
+                ssd_dir=f"{work}/ssd1", save_dir=str(persist)),
+            "cold-restart": run_lifetime(
+                "cold-restart", args, cfg, params, events,
+                ssd_dir=f"{work}/ssd2"),
+            "warm-restart": run_lifetime(
+                "warm-restart", args, cfg, params, events,
+                ssd_dir=f"{work}/ssd3", load_dir=str(persist)),
+        }
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+    cold, warm = rows["cold-restart"], rows["warm-restart"]
+    toks = [r["tokens"] for r in rows.values()]
+    checks = {
+        "tokens_identical": toks[0] == toks[1] == toks[2],
+        "warm_hit_rate": warm["prefix_hit_rate"],
+        "warm_hit_rate_nonzero": warm["prefix_hit_rate"] > 0.0,
+        "warm_hit_rate_ok":
+            warm["prefix_hit_rate"] >= args.min_warm_hit_rate,
+        "warm_beats_cold_hit_rate":
+            warm["prefix_hit_rate"] > cold["prefix_hit_rate"],
+        "warm_restored_tokens_nonzero": warm["restored_tokens"] > 0,
+        "warm_flash_reads_nonzero": warm["kv_ssd_read_bytes"] > 0,
+        "warm_ttft_improved": warm["p50_ttft_s"] < cold["p50_ttft_s"],
+        "ttft_ratio": cold["p50_ttft_s"] / max(warm["p50_ttft_s"], 1e-12),
+        "warm_fewer_prefill_dispatches":
+            warm["prefill_dispatches"] < cold["prefill_dispatches"],
+        "warm_no_slower": warm["tokens_per_s"]
+        >= cold["tokens_per_s"] * (1 - 1e-9),
+    }
+    for k, v in checks.items():
+        flag = "" if bool(v) else "  <-- EXPECTED TO HOLD"
+        print(f"  {k}: {v}{flag}")
+
+    for row in rows.values():
+        row.pop("tokens")                  # keep the JSON artifact small
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parent / "BENCH_restart.json"
+    payload = {"config": vars(args), "systems": rows, "checks": checks}
+    out.write_text(json.dumps(payload, indent=1, default=float))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate (run in CI).
+
+The serving benchmarks emit ``benchmarks/BENCH_*.json`` artifacts whose
+``checks`` blocks carry boolean acceptance properties *and* the key
+numeric metrics (modeled tok/s speedups, gCO2/request ratios, prefix hit
+rates, jit dispatches per step). The committed artifacts are the
+baseline; this script compares a fresh re-run against them within a
+relative tolerance band and fails the build on regressions — not just on
+boolean flips.
+
+Rules per metric (see ``METRICS``):
+  * ``higher`` — fresh must stay >= baseline * (1 - tolerance)
+  * ``lower``  — fresh must stay <= baseline * (1 + tolerance)
+Metric paths are dotted into the JSON; ``a/b`` derives a ratio from two
+paths (e.g. a gCO2/request improvement ratio). Metrics whose baseline is
+0 or missing are skipped with a note (a degenerate baseline can't band a
+regression). All boolean entries of the fresh ``checks`` block must be
+true, as before.
+
+Usage:
+  python scripts/check_bench.py --fresh DIR [--tolerance 0.25]
+  python scripts/check_bench.py --run     # re-run smokes, then compare
+
+``SMOKE_RUNS`` is the single source of truth for the smoke invocations:
+CI's bench job calls ``check_bench.py --run --fresh bench-fresh`` and
+uploads the emitted artifacts from that directory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_DIR = ROOT / "benchmarks"
+
+#: smoke invocations — the single source of truth (CI's bench job runs
+#: `check_bench.py --run --fresh bench-fresh` instead of spelling these
+#: out again)
+SMOKE_RUNS = {
+    "BENCH_serving.json": ["benchmarks/serving_batched.py",
+                           "--requests", "8", "--gen-len", "8"],
+    "BENCH_prefix.json": ["benchmarks/serving_prefix.py",
+                          "--requests", "8", "--gen-len", "6"],
+    "BENCH_restart.json": ["benchmarks/serving_restart.py",
+                           "--requests", "8"],
+}
+
+#: per-artifact regression metrics: (name, dotted path [or "a/b" ratio],
+#: direction). Paths step through dicts; a path segment may contain
+#: dots-free keys only, so system names use the literal key.
+METRICS = {
+    "BENCH_serving.json": [
+        ("batched_tok_s_speedup", "checks.batched_speedup", "higher"),
+        ("batched_dispatches_per_step",
+         "systems.batched.jit_dispatches_per_step", "lower"),
+        ("gco2_per_request_ratio",
+         "systems.per-session.gco2_per_request"
+         "/systems.batched.gco2_per_request", "higher"),
+        ("prefetch_overlapped_bytes",
+         "systems.batched+prefetch.overlapped_bytes", "higher"),
+    ],
+    "BENCH_prefix.json": [
+        ("radix_tok_s_speedup", "checks.radix_speedup", "higher"),
+        ("prefix_hit_rate", "checks.hit_rate", "higher"),
+        ("prefill_dispatches_per_step",
+         "systems.radix+batched.steady.prefill_dispatches_per_step",
+         "lower"),
+        ("gco2_per_request_ratio",
+         "systems.no-reuse.steady.gco2_per_request"
+         "/systems.radix.steady.gco2_per_request", "higher"),
+    ],
+    "BENCH_restart.json": [
+        ("warm_hit_rate", "checks.warm_hit_rate", "higher"),
+        ("warm_ttft_ratio", "checks.ttft_ratio", "higher"),
+        ("warm_prefill_dispatches",
+         "systems.warm-restart.prefill_dispatches", "lower"),
+        ("warm_restored_tokens",
+         "systems.warm-restart.restored_tokens", "higher"),
+    ],
+}
+
+
+def _lookup(doc, path: str):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _metric(doc, path: str):
+    if "/" in path:
+        num, den = path.split("/", 1)
+        a, b = _lookup(doc, num), _lookup(doc, den)
+        if a is None or b is None or not b:
+            return None
+        return float(a) / float(b)
+    v = _lookup(doc, path)
+    return float(v) if v is not None else None
+
+
+def compare(name: str, base: dict, fresh: dict, tol: float) -> list:
+    errors = []
+    for key, val in fresh.get("checks", {}).items():
+        if isinstance(val, bool) and not val:
+            errors.append(f"{name}: boolean check {key!r} is False")
+    for mname, path, direction in METRICS.get(name, []):
+        b, f = _metric(base, path), _metric(fresh, path)
+        if f is None:
+            errors.append(f"{name}: metric {mname!r} missing from "
+                          "fresh run")
+            continue
+        if b is None or b == 0.0:
+            print(f"check_bench: {name}:{mname} skipped "
+                  f"(degenerate baseline {b!r})")
+            continue
+        if direction == "higher" and f < b * (1.0 - tol):
+            errors.append(
+                f"{name}: {mname} regressed: {f:.4g} < baseline "
+                f"{b:.4g} * (1 - {tol}) [{path}]")
+        elif direction == "lower" and f > b * (1.0 + tol):
+            errors.append(
+                f"{name}: {mname} regressed: {f:.4g} > baseline "
+                f"{b:.4g} * (1 + {tol}) [{path}]")
+        else:
+            print(f"check_bench: {name}:{mname} ok "
+                  f"({direction}): fresh {f:.4g} vs base {b:.4g}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=None,
+                    help="directory holding freshly-emitted BENCH_*.json "
+                         "(required unless --run)")
+    ap.add_argument("--run", action="store_true",
+                    help="re-run the smoke benchmarks into a temp dir "
+                         "first, then compare")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative tolerance band (default 0.25)")
+    args = ap.parse_args()
+    if not args.run and not args.fresh:
+        ap.error("--fresh DIR or --run is required")
+
+    fresh_dir = pathlib.Path(args.fresh) if args.fresh else \
+        pathlib.Path(tempfile.mkdtemp(prefix="bench_fresh_"))
+    if args.run:
+        fresh_dir.mkdir(parents=True, exist_ok=True)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(ROOT / "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        for name, cmd in SMOKE_RUNS.items():
+            full = [sys.executable, str(ROOT / cmd[0]), *cmd[1:],
+                    "--out", str(fresh_dir / name)]
+            print("check_bench: running", " ".join(full))
+            subprocess.run(full, check=True, cwd=ROOT, env=env)
+
+    errors = []
+    for name in sorted(METRICS):
+        base_path = BENCH_DIR / name
+        fresh_path = fresh_dir / name
+        if not base_path.exists():
+            errors.append(f"missing committed baseline benchmarks/{name}")
+            continue
+        if not fresh_path.exists():
+            errors.append(f"missing fresh artifact {fresh_path}")
+            continue
+        base = json.loads(base_path.read_text())
+        fresh = json.loads(fresh_path.read_text())
+        errors.extend(compare(name, base, fresh, args.tolerance))
+
+    if errors:
+        for e in errors:
+            print(f"check_bench: {e}", file=sys.stderr)
+        sys.exit(1)
+    print("check_bench: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -47,11 +47,13 @@ def main():
         if bench.name not in serving_doc:
             errors.append(f"docs/SERVING.md does not mention {bench.name}")
     for topic in ("radix", "copy-on-write", "refcount",
-                  "carbon-aware admission"):
+                  "carbon-aware admission", "real KV residency",
+                  "suffix-only prefill", "persistence across restarts",
+                  "prefill_resume"):
         if topic.lower() not in serving_doc.lower():
             errors.append(
                 f"docs/SERVING.md does not document {topic!r} "
-                "(prefix-cache rules must stay written down)")
+                "(prefix-cache + residency rules must stay written down)")
 
     arch_doc = (ROOT / "docs" / "ARCHITECTURE.md").read_text() \
         if (ROOT / "docs" / "ARCHITECTURE.md").exists() else ""

@@ -5,7 +5,6 @@ Usage: PYTHONPATH=src python scripts/make_experiments.py > results/tables.md
 import glob
 import json
 import os
-import sys
 
 DIR = "results/dryrun"
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional, Sequence
+from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)

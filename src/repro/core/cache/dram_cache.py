@@ -11,9 +11,8 @@ computes; eviction pops the oldest non-fixed layer.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, Optional
+from typing import Dict
 
-import numpy as np
 
 
 class DRAMCache:

@@ -16,9 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Sequence
 
-import numpy as np
 
 from repro.core.quantize import bytes_per_neuron
 

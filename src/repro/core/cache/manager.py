@@ -18,9 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 from collections import Counter
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
-import numpy as np
 
 from repro.core.cache.dram_cache import DRAMCache
 from repro.core.cache.hbm_cache import HBMCache

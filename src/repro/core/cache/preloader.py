@@ -28,7 +28,7 @@ unfinished transfer; bytes that arrived in time are counted as
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 
 @dataclasses.dataclass

@@ -20,7 +20,6 @@ the paper's "+MP Inference" / "+LRU Cache" / "+SSDs" stages.
 from __future__ import annotations
 
 import dataclasses
-import os
 import tempfile
 import time
 from typing import Dict, List, Optional, Sequence
@@ -35,7 +34,6 @@ from repro.core.cache.preloader import (PCIE_CHANNEL, SSD_CHANNEL,
 from repro.core.cache.ssd_tier import SSDTier
 from repro.core.hw import HOST, HostHW
 from repro.core.mp_ffn import tier_sizes
-from repro.core.quantize import bytes_per_neuron
 
 
 @dataclasses.dataclass
@@ -124,7 +122,17 @@ class DecodeSession:
     prefix_hit: int = 0                 # prompt tokens served by the
                                         # prefix cache (no compute charged)
     max_new_tokens: int = 0
+    exec_done: int = 0                  # real chunked: prompt tokens whose
+                                        # jit prefill actually ran (block-
+                                        # aligned; starts at the restored
+                                        # prefix on a hit)
+    prefix_kv: Optional[list] = None    # real chunked: per-block host KV
+                                        # payloads to restore before the
+                                        # first suffix chunk
     _pos_sets: Optional[list] = None    # real: per-layer (P, k) active idx
+    _chunk_sets: dict = dataclasses.field(default_factory=dict)
+                                        # real chunked: block idx -> per-
+                                        # layer active sets of that chunk
     _batch: object = None               # real: DecodeBatch currently joined
     _row: int = -1                      # real: row inside that batch
 
@@ -145,6 +153,47 @@ class StepReport:
     overlapped_bytes: float = 0.0       # prefetched bytes that hid in time
 
 
+class _SessionKVProvider:
+    """Exports/imports one session's *actual* KV tensor bytes per block
+    for the tiered cache's real-residency mode: ``export`` device_gets a
+    token slice out of the session's cache pytree (optionally scrubbing
+    the device copy — demotion really removes the bytes), ``import_``
+    device_puts it back. Sessions whose live state sits in a stacked
+    DecodeBatch row are handled in place via the row index."""
+
+    def __init__(self, sess: DecodeSession):
+        self.sess = sess
+
+    def _state(self):
+        s = self.sess
+        if s._batch is not None:
+            return s._batch, s._batch.stack, s._row
+        assert s.cache is not None, \
+            f"rid {s.rid}: no executed KV state to export/import"
+        return None, s.cache, None
+
+    def export(self, tok0: int, ntokens: int, *, scrub: bool = False):
+        from repro.core import kv_payload as KP
+        batch, cache, row = self._state()
+        payload = KP.extract(cache, tok0, tok0 + ntokens, row=row)
+        if scrub:
+            cache = KP.scrub(cache, tok0, tok0 + ntokens, row=row)
+            if batch is not None:
+                batch.stack = cache
+            else:
+                self.sess.cache = cache
+        return payload
+
+    def import_(self, tok0: int, payload: dict):
+        from repro.core import kv_payload as KP
+        batch, cache, row = self._state()
+        cache = KP.inject(cache, payload, tok0, row=row)
+        if batch is not None:
+            batch.stack = cache
+        else:
+            self.sess.cache = cache
+
+
 class M2CacheEngine:
     def __init__(self, cfg=None, params=None, *, paper_model: str = None,
                  mode: str = "m2cache", hbm_policy: str = "atu",
@@ -152,7 +201,7 @@ class M2CacheEngine:
                  dram_capacity_gb: float = 56.0, hw: HostHW = HOST,
                  overlap: float = 0.8, device_name: str = "rtx3090",
                  seed: int = 0, batched_decode: bool = True,
-                 prefill_bucket: int = 8):
+                 prefill_bucket: int = 8, kv_block_tokens: int = 16):
         assert mode in ("m2cache", "zero_infinity")
         assert (cfg is not None) != (paper_model is not None)
         self.cfg = cfg
@@ -174,6 +223,24 @@ class M2CacheEngine:
         # prices each iteration's concurrent prefill chunks as one
         # dispatch group); <= 1 keeps the per-session prefill path
         self.prefill_bucket = max(int(prefill_bucket), 1)
+        # KV block granularity shared with the serving TieredKVCache: real
+        # prefill executes in chunks of exactly this many tokens, so a
+        # block's KV is a pure function of the tokens at and before it —
+        # the property that lets radix prefix hits restore cached blocks
+        # and run suffix-only prefill with byte-identical results
+        self.kv_block_tokens = max(int(kv_block_tokens), 1)
+        # real KV residency: can this engine's KV state be sliced into
+        # host payloads per block (attn-only archs, no sliding window)?
+        from repro.core.kv_payload import supports_payloads
+        self.supports_kv_payloads = (params is not None
+                                     and mode == "m2cache"
+                                     and supports_payloads(cfg))
+        # block-chunked real prefill rides the same gate (it needs
+        # mode="prefill_resume", which recurrent/audio layers lack)
+        self._chunked_real = self.supports_kv_payloads
+        self.prefix_restored_tokens = 0  # prompt tokens whose KV came
+                                         # from restored radix blocks
+                                         # (suffix-only prefill ran)
         self._ssd_dir = ssd_dir or tempfile.mkdtemp(prefix="m2cache_ssd_")
         # one modeled async-DMA engine shared by weight preloads and KV
         # prefetch — both ride the same flash bus and PCIe link
@@ -313,8 +380,27 @@ class M2CacheEngine:
             self._zi_clock += dt
 
     def kv_bytes_per_token(self) -> float:
-        """FP16 K+V bytes one token pins across all layers."""
+        """KV bytes one token pins across all layers. With real KV
+        residency (tiny model, payload-capable arch) this is the *actual*
+        byte count of the cache leaves a token occupies — the transfer
+        clock then prices the bytes that really move between tiers;
+        analytic/paper-scale engines use the modeled FP16 K+V figure."""
+        if self.supports_kv_payloads:
+            from repro.core.kv_payload import token_nbytes
+            from repro.models import transformer as T
+            import jax.numpy as jnp
+            specs = T.cache_specs(self.cfg, 1, max_seq=32,
+                                  dtype=jnp.float32)
+            return token_nbytes(specs)
         return 2.0 * self.num_layers * self.d_model * 2.0
+
+    def kv_provider(self, sess: DecodeSession):
+        """Block-payload provider for the tiered KV cache's real-residency
+        mode, or None when this engine/session pages modeled surrogates
+        (analytic mode, promptless sessions, payload-incapable archs)."""
+        if not self.supports_kv_payloads or sess.prompt is None:
+            return None
+        return _SessionKVProvider(sess)
 
     def _runner_for(self, max_seq: int):
         # bucket to the next power of two (>= 32) so requests with nearby
@@ -346,7 +432,8 @@ class M2CacheEngine:
     def begin_prefill(self, prompt=None, *, rid: int = 0,
                       prompt_len: Optional[int] = None,
                       max_new_tokens: int = 32,
-                      prefix_hit: int = 0) -> DecodeSession:
+                      prefix_hit: int = 0,
+                      prefix_kv: Optional[list] = None) -> DecodeSession:
         """Open a decode session without charging any clock.
 
         The prompt is processed by subsequent :meth:`prefill_chunk` calls
@@ -357,11 +444,17 @@ class M2CacheEngine:
         ``prefix_hit`` marks the leading prompt tokens whose KV the
         prefix cache serves from the tiered hierarchy: no prefill
         compute is charged for them (``prompt_done`` starts there), the
-        scheduler charges their residency transfers instead. Real-tiny
-        mode still runs the full jit prefill at the first chunk — the
-        blocks are modeled surrogates, so recomputation is what keeps
-        tokens byte-identical with the cache on or off; only the modeled
-        clock skips the hit prefix.
+        scheduler charges their residency transfers instead.
+
+        ``prefix_kv`` makes the hit *semantically* real: a list of
+        per-block host payloads (one per ``kv_block_tokens`` tokens of
+        the hit, from :meth:`TieredKVCache.payloads_for`) that the first
+        execution device_puts into the fresh cache — prefill then runs
+        only the suffix chunks. Block-chunked prefill guarantees the
+        suffix chunks are bitwise identical to a full recompute. Without
+        ``prefix_kv`` (analytic engines, payload-incapable archs, or a
+        caller that kept modeled-only hits) the real path recomputes the
+        whole prompt and only the modeled clock skips the hit prefix.
         """
         if prompt is not None:
             prompt = np.asarray(prompt)
@@ -376,7 +469,17 @@ class M2CacheEngine:
                              prompt_done=hit, prefix_hit=hit)
         if self.mode == "zero_infinity":
             return sess
-        if not (self.params is not None and prompt is not None):
+        real = self.params is not None and prompt is not None
+        if real and prefix_kv is not None and self._chunked_real \
+                and hit > 0 and len(prefix_kv) * self.kv_block_tokens \
+                == hit and all(p is not None for p in prefix_kv):
+            # restorable hit: suffix-only prefill starts past the hit
+            # (chunked execution always runs the *unpadded* prompt, so
+            # cached block positions line up across requests regardless
+            # of trace-level left padding)
+            sess.prefix_kv = list(prefix_kv)
+            sess.exec_done = hit
+        if not real:
             sess.procs = self._analytic_procs(rid) if self.d_ff else None
         return sess
 
@@ -403,9 +506,14 @@ class M2CacheEngine:
             rep = self._zero_infinity_step(n)
         else:
             if self.params is not None and sess.prompt is not None:
-                if sess.runner is None:
-                    dispatches = 1       # first chunk runs the jit prefill
-                sets = self._real_chunk_sets(sess, n)
+                if self._chunked_real:
+                    dispatches = self._advance_exec(
+                        [sess], {id(sess): sess.prompt_done + n}, bucket=1)
+                    sets = self._chunk_sets_for(sess, sess.prompt_done + n)
+                else:
+                    if sess.runner is None:
+                        dispatches = 1   # first chunk runs the jit prefill
+                    sets = self._real_chunk_sets(sess, n)
             else:
                 sets = [pr.step() for pr in sess.procs] if sess.procs else \
                     [np.zeros(0, np.int64)] * self.num_layers
@@ -452,6 +560,115 @@ class M2CacheEngine:
             else:
                 out.append(arr)
         return out
+
+    # ------------------------------------------------------------------
+    # block-chunked real prefill: execution in fixed KV-block chunks
+
+    def _true_prompt_row(self, sess: DecodeSession) -> np.ndarray:
+        """Unpadded prompt token ids (1D int32) — chunked execution runs
+        true positions, so cached block positions line up across
+        requests regardless of trace-level left padding."""
+        return np.asarray(sess.prompt[0, -sess.prompt_len:], np.int32)
+
+    def _init_exec(self, sess: DecodeSession):
+        """Create a session's runner + fresh cache; on a restorable
+        prefix hit, device_put the cached blocks into it and start the
+        executed frontier past the hit (suffix-only prefill)."""
+        import jax.numpy as jnp
+        from repro.core import kv_payload as KP
+        from repro.models import transformer as T
+        sess.runner = self._runner_for(sess.prompt_len
+                                       + sess.max_new_tokens + 1)
+        cache = T.init_cache(self.cfg, 1, max_seq=sess.runner.max_seq,
+                             dtype=sess.runner.dtype)
+        if sess.prefix_kv:
+            bt = self.kv_block_tokens
+            for i, payload in enumerate(sess.prefix_kv):
+                cache = KP.inject(cache, payload, i * bt)
+            cache["pos"] = jnp.asarray(sess.exec_done, jnp.int32)
+            self.prefix_restored_tokens += sess.exec_done
+            sess.prefix_kv = None
+        else:
+            sess.exec_done = 0
+        sess.cache = cache
+
+    def _advance_exec(self, sessions: Sequence[DecodeSession],
+                      targets: Dict[int, int], *, bucket: int) -> int:
+        """Run jit'd prefill chunks of exactly ``kv_block_tokens`` tokens
+        (the last chunk right-padded) until every session's executed
+        frontier covers its target (``targets[id(sess)]``, true prompt
+        tokens). Fixed-width chunks mean a block's KV depends only on
+        the tokens at and before it — prerequisite for prefix reuse —
+        and one traced graph serves every chunk of a row-count bucket.
+        Same-runner sessions advance together in stacked vmapped
+        dispatches of <= ``bucket`` rows (rows may sit at *different*
+        positions — pos is per-row cache state). Returns jit dispatches
+        launched."""
+        import jax.numpy as jnp
+        from repro.core.engine_model import (_gather_row, _stack_rows,
+                                             flatten_active_idx,
+                                             flatten_active_idx_batched)
+        bt = self.kv_block_tokens
+        bucket = max(bucket, 1)
+        for s in sessions:
+            if s.runner is None:
+                self._init_exec(s)
+        dispatches = 0
+        while True:
+            pending = [s for s in sessions
+                       if s.exec_done < min(targets[id(s)], s.prompt_len)]
+            if not pending:
+                return dispatches
+            groups: Dict[int, list] = {}
+            for s in pending:
+                end = min((s.exec_done // bt + 1) * bt, s.prompt_len)
+                groups.setdefault(id(s.runner), []).append((s, end))
+            for members in groups.values():
+                runner = members[0][0].runner
+                for i in range(0, len(members), bucket):
+                    grp = members[i:i + bucket]
+                    dispatches += 1
+                    toks = np.zeros((len(grp), bt), np.int32)
+                    nv = np.zeros((len(grp),), np.int32)
+                    for j, (s, end) in enumerate(grp):
+                        chunk = self._true_prompt_row(s)[s.exec_done:end]
+                        toks[j, :chunk.size] = chunk
+                        nv[j] = end - s.exec_done
+                    if len(grp) == 1:
+                        s, end = grp[0]
+                        s.last, s.cache, aux = runner._prefill_block(
+                            self.params, s.cache, jnp.asarray(toks[0]),
+                            jnp.asarray(nv[0]))
+                        s.last = s.last[None]
+                        s._chunk_sets[s.exec_done // bt] = [
+                            np.asarray(a) for a in
+                            flatten_active_idx(self.cfg, aux)]
+                        s.exec_done = end
+                        continue
+                    cap = 1 << (len(grp) - 1).bit_length()   # pow2 trace
+                    caches = [s.cache for s, _ in grp] \
+                        + [grp[0][0].cache] * (cap - len(grp))
+                    rows = np.concatenate(
+                        [toks, np.tile(toks[:1], (cap - len(grp), 1))])
+                    nvs = np.concatenate(
+                        [nv, np.tile(nv[:1], cap - len(grp))])
+                    last, stack, aux = runner._prefill_block_rows(
+                        self.params, _stack_rows(caches),
+                        jnp.asarray(rows), jnp.asarray(nvs))
+                    per_layer = flatten_active_idx_batched(self.cfg, aux)
+                    for j, (s, end) in enumerate(grp):
+                        s.cache = _gather_row(stack, j)
+                        s.last = last[j][None]
+                        s._chunk_sets[s.exec_done // bt] = [
+                            np.asarray(a[j]) for a in per_layer]
+                        s.exec_done = end
+
+    def _chunk_sets_for(self, sess: DecodeSession, upto: int) -> list:
+        """Active sets charged for the modeled chunk ending at true
+        position ``upto`` — the executed block covering its last token
+        (the chunked analogue of 'the chunk's last position's predictor
+        output')."""
+        return sess._chunk_sets[(upto - 1) // self.kv_block_tokens]
 
     def prefill(self, prompt=None, *, rid: int = 0,
                 prompt_len: Optional[int] = None,
@@ -563,8 +780,13 @@ class M2CacheEngine:
                 and s.prompt is not None]
         real_ids = {id(s) for s in real}
         other = [s for s in sessions if id(s) not in real_ids]
-        dispatches = self._stacked_real_prefill(
-            [s for s in real if s.runner is None])
+        if self._chunked_real:
+            dispatches = self._advance_exec(
+                real, {id(s): s.prompt_done + ns[id(s)] for s in real},
+                bucket=self.prefill_bucket)
+        else:
+            dispatches = self._stacked_real_prefill(
+                [s for s in real if s.runner is None])
         # dispatch groups for pricing: real sessions per runner bucket,
         # analytic sessions together
         groups: List[list] = []
@@ -581,7 +803,9 @@ class M2CacheEngine:
             for s in members:
                 if id(s) in real_ids:
                     per_sess_sets.append(
-                        self._real_chunk_sets(s, ns[id(s)]))
+                        self._chunk_sets_for(s, s.prompt_done + ns[id(s)])
+                        if self._chunked_real
+                        else self._real_chunk_sets(s, ns[id(s)]))
                 elif s.procs:
                     per_sess_sets.append([pr.step() for pr in s.procs])
                 else:

@@ -28,7 +28,6 @@ to the per-session prefill. Row counts are padded to powers of two
 """
 from __future__ import annotations
 
-import functools
 from typing import List, Optional, Tuple
 
 import jax
@@ -94,6 +93,13 @@ def _gather_row(stack, i):
     return jax.tree.map(lambda s: s[i], stack)
 
 
+def _stack_rows(rows):
+    """Stack per-session pytrees on a new leading row axis (the transient
+    grouping the block-chunked prefill uses per dispatch; decode's
+    persistent stacking lives in :class:`DecodeBatch`)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+
 class RealModelRunner:
     def __init__(self, cfg, params, *, max_seq: int, dtype=jnp.float32):
         self.cfg = cfg
@@ -133,6 +139,24 @@ class RealModelRunner:
                                            m2=True)
             return logits[0, -1, :], cache, aux["active_idx"]
 
+        def prefill_block_one_row(params, cache, tokens, n_valid):
+            # one block-chunk of one prompt row: `tokens` is a fixed-width
+            # chunk (right-padded past `n_valid`) written into the cache
+            # buffer at cache["pos"] and attended over the whole buffer
+            # (mode="prefill_resume"). The chunk's outputs are a pure
+            # function of the buffer below pos and the chunk tokens, so a
+            # chunk recomputed from scratch and a chunk run after a
+            # prefix-KV restore are bitwise identical — the property that
+            # makes suffix-only prefill from a radix hit byte-exact.
+            # Pad positions write garbage K/V past the prompt; causal
+            # masking hides them and decode overwrites them in place.
+            p0 = cache["pos"]
+            logits, cache, aux = T.forward(cfg, params, tokens[None],
+                                           cache=cache,
+                                           mode="prefill_resume", m2=True)
+            cache["pos"] = (p0 + n_valid).astype(jnp.int32)
+            return logits[0, n_valid - 1, :], cache, aux["active_idx"]
+
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode)
         # one dispatch advances every row of a stacked decode batch
@@ -141,6 +165,12 @@ class RealModelRunner:
         # one dispatch prefills every row of a stacked prompt group
         self._prefill_rows = jax.jit(
             jax.vmap(prefill_one_row, in_axes=(None, 0)))
+        # one dispatch advances one prompt by one KV-block chunk
+        self._prefill_block = jax.jit(prefill_block_one_row)
+        # ... or every row of a stacked group of same-width chunks (rows
+        # may sit at *different* positions: pos is per-row cache state)
+        self._prefill_block_rows = jax.jit(
+            jax.vmap(prefill_block_one_row, in_axes=(None, 0, 0, 0)))
 
     def generate(self, prompts, gen_len: int
                  ) -> Tuple[np.ndarray, List[List[np.ndarray]]]:

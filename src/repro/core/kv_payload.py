@@ -1,0 +1,124 @@
+"""Real KV-block payloads: token ranges of a jax KV-cache pytree,
+materialised as host numpy arrays and re-injected on demand.
+
+This is the byte-level substrate of real KV residency in the tiered
+HBM→DRAM→SSD cache: an HBM-resident block's bytes live inside a serving
+session's (or a stacked decode batch's) device pytree; demoting a block
+``device_get``-s its token slice out of every KV leaf into a payload dict
+(keyed by the leaf's tree path), and promoting it ``device_put``-s the
+same bytes back at the same positions. Because prefill is block-chunked
+(``mode="prefill_resume"`` attends over the cache buffer), a block's KV
+is a pure function of the tokens at and before it — so a payload
+extracted from one request's prefill can be injected into another
+request's fresh cache (the radix prefix-cache hit path) or serialized to
+flash and restored across a server restart, bit-for-bit.
+
+Only leaves with a token axis are payloaded: ``k``/``v`` (…, S, kvH, Dh)
+and the kv-quant scales ``k_s``/``v_s`` (…, S, kvH). Recurrent state
+(ssm / rglru) has no token axis — archs carrying it (and audio's
+codebook prompts, and sliding-window caches whose ring slots alias
+positions) fall back to modeled-only residency; :func:`supports_payloads`
+is the gate.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+#: leaf name -> token axis (negative: independent of stacked lead axes)
+_TOKEN_AXIS = {"k": -3, "v": -3, "k_s": -2, "v_s": -2}
+
+
+def supports_payloads(cfg) -> bool:
+    """Can this architecture's KV state be sliced per token block?"""
+    if cfg is None or getattr(cfg, "family", "") == "audio":
+        return False
+    if getattr(cfg, "window_size", 0):
+        return False                     # ring slots alias positions
+    from repro.models import transformer as T
+    return all(kind == "attn" for kind in T.pattern_of(cfg))
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return last.key if hasattr(last, "key") else str(last)
+
+
+def _kv_leaves(cache):
+    """Yield (path_key, token_axis, leaf) for every KV leaf."""
+    from jax.tree_util import keystr, tree_flatten_with_path
+    leaves, _ = tree_flatten_with_path(cache)
+    for path, leaf in leaves:
+        ax = _TOKEN_AXIS.get(_leaf_name(path))
+        if ax is not None:
+            yield keystr(path), ax, leaf
+
+
+def _index(ndim: int, ax: int, start: int, stop: int,
+           row: Optional[int]) -> tuple:
+    idx = [slice(None)] * ndim
+    idx[ax] = slice(start, stop)
+    if row is not None:
+        idx[0] = row
+    return tuple(idx)
+
+
+def extract(cache, start: int, stop: int, *,
+            row: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Copy token positions ``[start, stop)`` of every KV leaf to host
+    numpy arrays (a device_get per leaf). ``row`` selects one row of a
+    stacked (leading-axis) pytree, e.g. a DecodeBatch member."""
+    out = {}
+    for key, ax, leaf in _kv_leaves(cache):
+        out[key] = np.asarray(leaf[_index(leaf.ndim, ax, start, stop, row)])
+    return out
+
+
+def inject(cache, payload: Dict[str, np.ndarray], start: int, *,
+           row: Optional[int] = None):
+    """Write a payload back at token position ``start`` (a device_put per
+    leaf); returns the updated pytree. Inverse of :func:`extract`."""
+    import jax
+    import jax.numpy as jnp
+    from jax.tree_util import keystr
+
+    def write(path, leaf):
+        key = keystr(path)
+        ax = _TOKEN_AXIS.get(_leaf_name(path))
+        if ax is None or key not in payload:
+            return leaf
+        arr = jnp.asarray(payload[key], leaf.dtype)
+        stop = start + arr.shape[ax]     # negative axis: row-free payload
+        return leaf.at[_index(leaf.ndim, ax, start, stop, row)].set(arr)
+
+    return jax.tree_util.tree_map_with_path(write, cache)
+
+
+def scrub(cache, start: int, stop: int, *, row: Optional[int] = None):
+    """Zero token positions ``[start, stop)`` of every KV leaf — demotion
+    really removes the bytes from the device copy, so a broken promotion
+    path corrupts decode instead of silently passing."""
+    import jax
+
+    def wipe(path, leaf):
+        ax = _TOKEN_AXIS.get(_leaf_name(path))
+        if ax is None:
+            return leaf
+        return leaf.at[_index(leaf.ndim, ax, start, stop, row)].set(0)
+
+    return jax.tree_util.tree_map_with_path(wipe, cache)
+
+
+def payload_nbytes(payload: Dict[str, np.ndarray]) -> int:
+    return sum(a.nbytes for a in payload.values())
+
+
+def token_nbytes(specs) -> float:
+    """Real KV bytes one token pins, from a cache-spec pytree
+    (``T.cache_specs``): per KV leaf, total bytes / token-axis length."""
+    total = 0.0
+    for _, ax, leaf in _kv_leaves(specs):
+        nbytes = float(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        total += nbytes / leaf.shape[ax]
+    return total

@@ -12,7 +12,6 @@ does the two small matmuls.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ synthetic corpus (see data/pipeline.py) or any token file.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp

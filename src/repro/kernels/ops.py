@@ -9,7 +9,6 @@ per-output-channel.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict
 
 import jax

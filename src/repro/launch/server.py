@@ -176,15 +176,22 @@ def main():
     ap.add_argument("--prefix-carbon-aware", action="store_true",
                     help="gate prefix-cache inserts on the carbon trace "
                          "(skip caching when recompute-later is greener)")
+    ap.add_argument("--prefix-persist", default=None, metavar="DIR",
+                    help="persist the radix tree (structure + real KV "
+                         "block payloads) to DIR: loaded at startup if "
+                         "present (the reloaded subtree starts flash-"
+                         "resident, so a restarted server warm-starts "
+                         "with a nonzero hit rate), saved at exit")
     ap.add_argument("--prefill-bucket", type=int, default=8,
                     help="max same-width prompts stacked into one vmapped "
                          "prefill dispatch (<=1: per-session prefill)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if not args.prefix_cache and (args.prefix_carbon_aware
-                                  or args.prefix_capacity != 65536):
-        ap.error("--prefix-carbon-aware/--prefix-capacity require "
-                 "--prefix-cache")
+                                  or args.prefix_capacity != 65536
+                                  or args.prefix_persist):
+        ap.error("--prefix-carbon-aware/--prefix-capacity/"
+                 "--prefix-persist require --prefix-cache")
 
     eng = build_engine(args)
     vocab = eng.cfg.vocab_size if eng.cfg is not None else None
@@ -205,12 +212,20 @@ def main():
                                      args.prefix_capacity,
                                      prefix_carbon_aware=
                                      args.prefix_carbon_aware)
+    persist = {}
+    if args.prefix_persist:
+        import os
+        if os.path.exists(os.path.join(args.prefix_persist, "tree.json")):
+            persist["loaded"] = sched.prefix.load(args.prefix_persist)
     rep = sched.run(reqs)
+    if args.prefix_persist:
+        persist["saved"] = sched.prefix.save(args.prefix_persist)
     print(json.dumps({
         "summary": rep.summary(),
         "kv": rep.kv_stats,
         "cache": rep.cache_stats,
         "prefix": rep.prefix_stats,
+        "persist": persist,
         "carbon_g": rep.carbon,
     }, indent=1, default=float))
 

@@ -11,8 +11,7 @@ native attention is quadratic (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

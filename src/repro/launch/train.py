@@ -14,7 +14,6 @@ import argparse
 import json
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.training.optimizer import AdamWConfig

@@ -6,7 +6,6 @@ is implemented flash-style (chunked online softmax over query blocks) so the
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 

@@ -47,7 +47,6 @@ def rglru_block(cfg, p, x, state, pos, *, mode: str):
 
     state: {'h': (B,W), 'conv': (B,cw-1,W)} or None. Returns (y, new_state).
     """
-    w = cfg.lru_width
     y_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_y"]))
     xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
     conv_state = None if state is None else state["conv"]

@@ -13,9 +13,8 @@ The FFN inside attention/rglru blocks is one of:
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -270,7 +269,6 @@ def _init_special(cfg, params, *, m2: bool):
     freshly-initialised fp weights so all precisions agree."""
     def fix_layer(p, kind):
         if kind == "ssm":
-            nh = cfg.ssm_nheads
             shape = p["A_log"].shape    # possibly (F, nh)
             p = dict(p)
             p["A_log"] = jnp.zeros(shape, jnp.float32)      # A = -1
@@ -289,7 +287,6 @@ def _init_special(cfg, params, *, m2: bool):
         return p
 
     def dict_conv_init(cw):
-        w = cw.shape[-2] if cw.ndim >= 2 else 1
         return jnp.full(cw.shape, 1.0 / cw.shape[-2], jnp.float32)
 
     pat, F, rem = pattern_split(cfg)
@@ -550,6 +547,46 @@ def attn_layer(cfg, p, x, cache, pos0, *, mode: str, window: int, m2: bool,
         new_cache = {"k": ck, "v": cv}
         if kv_quant:
             new_cache.update({"k_s": cks, "v_s": cvs})
+    elif mode == "prefill_resume":
+        # Continue prefill at pos0 = cache["pos"]: write this chunk's K/V
+        # into the cache buffer at its absolute positions, then attend the
+        # chunk's queries over the *whole buffer* (earlier prefill chunks
+        # — or prefix-cache blocks restored byte-for-byte from the tiered
+        # hierarchy — plus this chunk). The chunk's outputs are a pure
+        # function of the buffer bytes below pos0 and the chunk tokens,
+        # which is what makes a chunk recomputed from scratch and a chunk
+        # run after a prefix-KV restore bitwise identical.
+        assert not w_eff, \
+            "prefill_resume does not support sliding-window attention"
+        sbuf = cache["k"].shape[1]
+        kv_quant = "k_s" in cache
+        if kv_quant:
+            k_st, ks_st = _kv_quantize(k)
+            v_st, vs_st = _kv_quantize(v)
+        else:
+            k_st = k.astype(cache["k"].dtype)
+            v_st = v.astype(cache["v"].dtype)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k_st, (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v_st, (0, pos0, 0, 0))
+        if kv_quant:
+            cks = jax.lax.dynamic_update_slice(
+                cache["k_s"], ks_st, (0, pos0, 0))
+            cvs = jax.lax.dynamic_update_slice(
+                cache["v_s"], vs_st, (0, pos0, 0))
+            k_at = _kv_dequantize(ck, cks, x.dtype)
+            v_at = _kv_dequantize(cv, cvs, x.dtype)
+        else:
+            k_at, v_at = ck, cv
+        kv_pos = jnp.arange(sbuf)
+        kv_pos_b = jnp.broadcast_to(kv_pos[None], (B, sbuf))
+        # causal mask (kv_pos <= q_pos) hides both in-chunk future tokens
+        # and whatever garbage sits beyond the prefill front
+        attn_out = chunked_attention(
+            q, k_at, v_at, positions, kv_pos_b, window=0,
+            softcap=cfg.logit_softcap)
+        new_cache = {"k": ck, "v": cv}
+        if kv_quant:
+            new_cache.update({"k_s": cks, "v_s": cvs})
     else:  # prefill: attend within prompt, then populate the cache
         attn_out = chunked_attention(
             q, k, v, positions, positions, window=w_eff,
@@ -661,8 +698,12 @@ def forward(cfg, params, tokens, *, prefix=None, cache=None,
 
     tokens: (B, S) int32 — audio: (B, K, S). prefix: (B, N, d) precomputed
     frontend embeddings (vlm patch / audio conditioning), prepended.
-    mode: train | prefill | decode. ``window`` forces sliding-window
-    attention for dense archs (long-context decode).
+    mode: train | prefill | prefill_resume | decode. ``window`` forces
+    sliding-window attention for dense archs (long-context decode).
+    ``prefill_resume`` continues a prefill at ``cache["pos"]`` — the
+    serving engine's block-chunked prefill path, where a chunk's K/V is
+    written into the cache buffer at its absolute positions and its
+    queries attend over the whole buffer (restored prefix blocks included).
     """
     m2 = m2 and cfg.m2_enabled
     pat, F, rem = pattern_split(cfg)
@@ -677,7 +718,8 @@ def forward(cfg, params, tokens, *, prefix=None, cache=None,
     # this, an 88-layer model stores L×B×S×d unsharded-d residuals/device.
     x = _constrain(x, policy, ("pod", "data"), None, "model")
 
-    pos0 = cache["pos"] if (cache is not None and mode == "decode") else 0
+    pos0 = cache["pos"] if (cache is not None
+                            and mode in ("decode", "prefill_resume")) else 0
 
     def super_block(x, p_list, c_list, pos0):
         """One pattern repeat: len(pat) layers inline."""

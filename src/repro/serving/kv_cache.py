@@ -9,12 +9,23 @@ and cold blocks spill to flash. This module implements exactly that:
   request (paged-attention style), each tracked with its current tier;
 * **LRU eviction** HBM→DRAM through the existing :class:`DRAMCache`
   (dynamic area, FIFO spill) and DRAM→SSD through the existing
-  :class:`SSDTier` (real file I/O on surrogate payloads, byte-scaled the
-  same way analytic weight banks are);
+  :class:`SSDTier` (real file I/O);
+* **real KV residency** (``store_payloads=True`` — the default when the
+  engine serves a real tiny model on a payload-capable arch): the
+  block's *actual tensor bytes* move with it. HBM-resident blocks live
+  in the owning session's jax cache pytree; demoting one device_gets
+  its token slice out of every KV leaf (``core/kv_payload.py``) and
+  scrubs the device copy, DRAM holds the materialized numpy arrays, and
+  the DRAM→SSD spill serializes them to real memmap files. Promotion
+  reverses each step and device_puts the same bits back. Rids without a
+  registered provider (analytic engines, prefix-tree nodes after their
+  donor finished, recurrent archs) page surrogates / host masters with
+  identical accounting;
 * **transfer-clock pricing** — every swap returns modeled seconds
-  (PCIe for HBM⇄DRAM, NVMe for DRAM⇄SSD) that the scheduler charges to
-  the engine clock, so KV paging shows up in ``modeled_s`` and therefore
-  in token rates, latency percentiles and carbon.
+  (PCIe for HBM⇄DRAM, NVMe for DRAM⇄SSD) for the *actual bytes moved*
+  that the scheduler charges to the engine clock, so KV paging shows up
+  in ``modeled_s`` and therefore in token rates, latency percentiles
+  and carbon.
 
 Units and clock semantics: every public mutator (``alloc`` / ``extend`` /
 ``append_token`` / ``ensure_resident`` / ``swap_out``) returns **modeled
@@ -65,6 +76,15 @@ class KVBlock:
     rid: int
     nbytes: float                 # real (unscaled) bytes
     tier: str                     # "hbm" | "dram" | "ssd"
+    tok0: int = 0                 # absolute first token position covered
+    data: Optional[dict] = None   # host payload (real-residency mode):
+                                  # set while the block's canonical bytes
+                                  # live host-side (DRAM tier, or an
+                                  # HBM-tier prefix-node block whose
+                                  # master copy is this dict); None when
+                                  # they live in a session's device
+                                  # pytree or in SSD files
+    real: bool = False            # a real payload was ever captured
 
 
 class TieredKVCache:
@@ -73,7 +93,8 @@ class TieredKVCache:
                  ssd_dir: str, hw: HostHW = HOST, block_tokens: int = 16,
                  bytes_per_token: float = None,
                  max_file_bytes: int = 65536,
-                 prefetch: Optional[PrefetchEngine] = None):
+                 prefetch: Optional[PrefetchEngine] = None,
+                 store_payloads: bool = False):
         self.hw = hw
         # shared modeled DMA engine (None -> all swaps priced serially)
         self.prefetch = prefetch
@@ -84,9 +105,18 @@ class TieredKVCache:
         self.bytes_per_token = bytes_per_token if bytes_per_token \
             else 2.0 * num_layers * d_model * 2.0          # fp16 K+V
         self.block_bytes = self.block_tokens * self.bytes_per_token
-        # surrogate payloads cap file size; byte_scale maps back to real
-        stored = int(min(self.block_bytes, max_file_bytes))
-        self.byte_scale = self.block_bytes / stored
+        # real-residency mode: demotions carry the actual KV tensor bytes
+        # (device_get from the owning session on demote, device_put back
+        # on promote, real files on flash) — sizes are the true payload
+        # sizes, so no surrogate byte-scaling applies
+        self.store_payloads = store_payloads
+        if store_payloads:
+            stored = int(self.block_bytes)
+            self.byte_scale = 1.0
+        else:
+            # surrogate payloads cap file size; byte_scale maps to real
+            stored = int(min(self.block_bytes, max_file_bytes))
+            self.byte_scale = self.block_bytes / stored
         self._stored = stored
         self.hbm_capacity = float(hbm_capacity_bytes)
         self.dram = DRAMCache(int(dram_capacity_bytes), n_fixed=0,
@@ -101,6 +131,12 @@ class TieredKVCache:
         self._hbm_lru: "OrderedDict[int, None]" = OrderedDict()
         self.hbm_used = 0.0
         self._next_bid = 0
+        # real-residency plumbing: per-rid providers export/import the
+        # actual tensor bytes of a block (the owning session's KV slices);
+        # _next_tok0 assigns each new block its absolute token range
+        # (a prefix-hit request's own blocks start past the hit)
+        self._providers: Dict[int, object] = {}
+        self._next_tok0: Dict[int, int] = {}
         # swap accounting (real bytes / modeled seconds)
         self.swap_out_bytes = 0.0
         self.swap_in_bytes = 0.0
@@ -120,6 +156,116 @@ class TieredKVCache:
         self.swap_s += dt
         return dt
 
+    # ------------------------------------------------------------------
+    # real-residency plumbing (store_payloads mode)
+
+    def register_provider(self, rid: int, provider):
+        """Attach the object that can export/import ``rid``'s actual KV
+        tensor bytes per block (``export(tok0, ntokens, scrub=...)`` /
+        ``import_(tok0, payload)`` against the owning session's device
+        pytree). Without a provider a rid pages modeled surrogates."""
+        if provider is not None:
+            self._providers[rid] = provider
+
+    def unregister_provider(self, rid: int):
+        self._providers.pop(rid, None)
+
+    def set_origin(self, rid: int, tok0: int):
+        """First absolute token position of ``rid``'s *own* blocks (a
+        prefix-hit request owns only the suffix past the hit)."""
+        self._next_tok0[rid] = int(tok0)
+
+    def _capture(self, blk: KVBlock, *, scrub: bool) -> Optional[dict]:
+        """Pull a block's real bytes host-side (device_get) if they are
+        not already captured. ``scrub`` zeroes the device copy, so the
+        demotion genuinely removes the bytes from HBM."""
+        if not self.store_payloads or blk.data is not None:
+            return blk.data
+        provider = self._providers.get(blk.rid)
+        if provider is None:
+            return None
+        blk.data = provider.export(blk.tok0, self.block_tokens,
+                                   scrub=scrub)
+        blk.real = True
+        return blk.data
+
+    def _deliver(self, blk: KVBlock, payload: Optional[dict]):
+        """Hand a promoted block's bytes back: device_put into the owning
+        session when a provider exists, else keep the host master copy
+        (prefix-node blocks, whose device copies live in the sessions
+        that restored them)."""
+        if payload is None:
+            blk.data = None
+            return
+        provider = self._providers.get(blk.rid)
+        if provider is not None:
+            provider.import_(blk.tok0, payload)
+            blk.data = None
+        else:
+            blk.data = payload
+
+    def materialize(self, rid: int, start_block: int, nblocks: int):
+        """Capture host copies of ``rid``'s blocks ``[start_block,
+        start_block+nblocks)`` without scrubbing the device copy — the
+        prefix cache calls this right before adopting a finished
+        prefill's prompt blocks, so donated radix-node blocks carry the
+        actual KV bytes a later hit will restore."""
+        if not self.store_payloads:
+            return
+        for bid in self.table[rid][start_block:start_block + nblocks]:
+            self._capture(self.blocks[bid], scrub=False)
+
+    def block_payload(self, bid: int) -> Optional[dict]:
+        """A block's host payload wherever it currently lives (host
+        master copy, DRAM store, or flash files — flash reads are copied
+        out so the caller owns the arrays). None for surrogate blocks."""
+        blk = self.blocks[bid]
+        if not (self.store_payloads and blk.real):
+            return None
+        if blk.data is not None:
+            return blk.data
+        if blk.tier == "dram" and bid in self.dram.dynamic:
+            payload = self.dram.dynamic[bid]
+            return payload if "kv" not in payload else None
+        if blk.tier == "ssd":
+            return {k: np.array(v)
+                    for k, v in self.ssd.read_layer(bid).items()}
+        return None
+
+    def payloads_for(self, rid: int) -> List[Optional[dict]]:
+        """Host payloads of ``rid``'s blocks in token order (the prefix
+        restore path: the scheduler hands these to the engine, which
+        device_puts them into the admitted request's fresh cache)."""
+        return [self.block_payload(b) for b in self.table.get(rid, [])]
+
+    def adopt_external(self, rid: int, payloads: List[Optional[dict]], *,
+                       tok0: int = 0):
+        """Create flash-resident blocks for ``rid`` from externally-held
+        payloads — the persistence load path: a reloaded radix subtree
+        starts SSD-resident and pays NVMe+PCIe promotion on first hit.
+        ``payloads`` entries may be None (surrogate mode). Charges
+        nothing — neither clock seconds nor the serving-time flash
+        counters (the load happens before serving starts, so
+        ``kv_ssd_write_bytes`` keeps measuring eviction/spill traffic
+        only)."""
+        assert rid not in self.table
+        self.set_origin(rid, tok0)
+        written0 = self.ssd.bytes_written
+        for payload in payloads:
+            bid = self._next_bid
+            self._next_bid += 1
+            blk = KVBlock(bid=bid, rid=rid, nbytes=self.block_bytes,
+                          tier="ssd", tok0=self._next_tok0[rid],
+                          real=payload is not None)
+            self._next_tok0[rid] += self.block_tokens
+            self.blocks[bid] = blk
+            self.table.setdefault(rid, []).append(bid)
+            self.ssd.write_layer(
+                bid, payload if payload is not None else self._payload(),
+                flush_meta=False)
+        self.ssd.bytes_written = written0     # startup copy, not a spill
+        self.tokens[rid] = len(payloads) * self.block_tokens
+
     def blocks_for(self, ntokens: int) -> int:
         return max((ntokens + self.block_tokens - 1) // self.block_tokens, 1)
 
@@ -138,13 +284,17 @@ class TieredKVCache:
             self.dram.drop(bid)
             blk = self.blocks[bid]
             blk.tier = "ssd"
+            blk.data = None                    # canonical copy now on flash
             self.swap_out_bytes += blk.nbytes
             dt += blk.nbytes / self.hw.ssd_bw
         return dt
 
     def _demote(self, bid: int) -> float:
         """HBM → DRAM (spilling DRAM → SSD if the dynamic area is full).
-        Returns raw seconds; callers charge at the public API boundary."""
+        In real-residency mode the block's actual tensor bytes are pulled
+        host-side (device_get) and the device copy scrubbed; otherwise a
+        surrogate payload stands in. Returns raw seconds; callers charge
+        at the public API boundary."""
         blk = self.blocks[bid]
         assert blk.tier == "hbm"
         dt = self._spill_dram_to_ssd(blk.nbytes)
@@ -153,7 +303,9 @@ class TieredKVCache:
             self.prefetch.cancel(("kv", bid))
         self._hbm_lru.pop(bid, None)
         self.hbm_used -= blk.nbytes
-        self.dram.insert(bid, self._payload())
+        payload = self._capture(blk, scrub=True)
+        self.dram.insert(bid, payload if payload is not None
+                         else self._payload())
         blk.tier = "dram"
         self.swap_out_bytes += blk.nbytes
         return dt + blk.nbytes / self.hw.pcie_bw
@@ -173,14 +325,23 @@ class TieredKVCache:
         return dt
 
     def _promote(self, bid: int, protect: Iterable[int]) -> float:
-        """DRAM/SSD → HBM."""
+        """DRAM/SSD → HBM. In real-residency mode the block's actual
+        bytes come back with it: a DRAM block's host arrays (or an SSD
+        block's file contents, copied out before the flash copy is
+        deleted) are device_put into the owning session, restoring the
+        scrubbed device state bit-for-bit."""
         blk = self.blocks[bid]
         dt = self._evict_for(blk.nbytes, protect)
+        payload = None
         if blk.tier == "dram":
+            if blk.real:
+                payload = blk.data or self.dram.dynamic.get(bid)
             self.dram.drop(bid)
             dt += blk.nbytes / self.hw.pcie_bw
         elif blk.tier == "ssd":
-            self.ssd.read_layer(bid)               # real flash read
+            banks = self.ssd.read_layer(bid)       # real flash read
+            if blk.real:
+                payload = {k: np.array(v) for k, v in banks.items()}
             self.ssd.delete_layer(bid, flush_meta=False)
             dt += blk.nbytes / self.hw.ssd_bw \
                 + blk.nbytes / self.hw.pcie_bw
@@ -188,6 +349,8 @@ class TieredKVCache:
         self._hbm_lru[bid] = None
         self.hbm_used += blk.nbytes
         self.swap_in_bytes += blk.nbytes
+        if blk.real:
+            self._deliver(blk, payload)
         return dt
 
     def _promote_async(self, bid: int, now: float) -> bool:
@@ -202,10 +365,15 @@ class TieredKVCache:
         if self.hbm_used + blk.nbytes > self.hbm_capacity:
             return False
         not_before = 0.0
+        payload = None
         if blk.tier == "dram":
+            if blk.real:
+                payload = blk.data or self.dram.dynamic.get(bid)
             self.dram.drop(bid)
         elif blk.tier == "ssd":
-            self.ssd.read_layer(bid)               # real flash read
+            banks = self.ssd.read_layer(bid)       # real flash read
+            if blk.real:
+                payload = {k: np.array(v) for k, v in banks.items()}
             self.ssd.delete_layer(bid, flush_meta=False)
             key = ("kv_ssd", bid)
             not_before = self.prefetch.issue(SSD_CHANNEL, key, blk.nbytes,
@@ -217,14 +385,22 @@ class TieredKVCache:
         self._hbm_lru[bid] = None
         self.hbm_used += blk.nbytes
         self.swap_in_bytes += blk.nbytes
+        if blk.real:
+            # the host→device copy lands now; only its *arrival time* is
+            # modeled asynchronously (ensure_resident charges the
+            # residual stall of the in-flight transfer)
+            self._deliver(blk, payload)
         return True
 
     def _new_block(self, rid: int, protect: Iterable[int]) -> float:
         dt = self._evict_for(self.block_bytes, protect)
         bid = self._next_bid
         self._next_bid += 1
+        tok0 = self._next_tok0.setdefault(rid, 0)
+        self._next_tok0[rid] = tok0 + self.block_tokens
         self.blocks[bid] = KVBlock(bid=bid, rid=rid,
-                                   nbytes=self.block_bytes, tier="hbm")
+                                   nbytes=self.block_bytes, tier="hbm",
+                                   tok0=tok0)
         self.table.setdefault(rid, []).append(bid)
         self._hbm_lru[bid] = None
         self.hbm_used += self.block_bytes
@@ -356,6 +532,8 @@ class TieredKVCache:
     def free(self, rid: int):
         """Release a finished request's blocks from every tier."""
         self.pinned.discard(rid)
+        self._providers.pop(rid, None)
+        self._next_tok0.pop(rid, None)
         for bid in self.table.pop(rid, []):
             blk = self.blocks.pop(bid)
             if self.prefetch is not None:
@@ -389,6 +567,8 @@ class TieredKVCache:
             "kv_ssd_blocks": sum(1 for b in self.blocks.values()
                                  if b.tier == "ssd"),
             "kv_blocks": len(self.blocks),
+            "kv_real_payload_blocks": sum(
+                1 for b in self.blocks.values() if b.real),
             "kv_swap_out_bytes": self.swap_out_bytes,
             "kv_swap_in_bytes": self.swap_in_bytes,
             "kv_ssd_write_bytes": self.ssd.bytes_written * self.byte_scale,

@@ -61,6 +61,8 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.carbon import CarbonIntensityTrace
 from repro.serving.kv_cache import TieredKVCache
 
@@ -302,6 +304,11 @@ class PrefixCache:
                          parent=path[-1] if path else self.root,
                          last_used=now)
         self._next_node_rid -= 1
+        # real KV residency: capture host copies of the donated blocks'
+        # actual tensor bytes (device_get from the donor's cache) before
+        # ownership moves — these are what a later hit restores, and what
+        # save() persists to flash
+        self.kv.materialize(rid, start_block, nblocks)
         self.kv.adopt_blocks(rid, node.rid, nblocks,
                              start_block=start_block)
         node.parent.children[node.blocks[0]] = node
@@ -345,6 +352,110 @@ class PrefixCache:
                     and parent.is_leaf():
                 heapq.heappush(heap, (parent.last_used, id(parent),
                                       parent))
+
+    # ------------------------------------------------------------------
+    # flash persistence: the tree survives server restarts
+
+    def save(self, dir_path: str) -> Dict[str, int]:
+        """Persist the radix tree to ``dir_path``: the node structure as
+        ``tree.json`` plus every node block's actual KV payload as
+        memmap files (the same on-disk format as the SSD weight tier).
+        A restarted server :meth:`load`-s the tree SSD-resident — first
+        hits pay NVMe+PCIe promotion instead of prefill compute, the
+        warm-restart story of the flash-resident prefix cache. Surrogate
+        (analytic) blocks persist structure-only. Returns counters."""
+        import json
+        import os
+        from repro.core.cache.ssd_tier import SSDTier
+        os.makedirs(dir_path, exist_ok=True)
+        # drop exactly the previous save's payload files (the ones its
+        # meta.json records) — never unrelated files in the directory
+        store = SSDTier(dir_path)
+        for pid in sorted({int(k.split(".", 1)[0][1:])
+                           for k in store._meta}):
+            store.delete_layer(pid, flush_meta=False)
+        # persistence reads are startup/shutdown copies, not serving-time
+        # promotion traffic: keep the tier's flash-read stats clean (the
+        # mirror of adopt_external's bytes_written guard)
+        read0, reads0 = self.kv.ssd.bytes_read, self.kv.ssd.reads
+        nodes, ids = [], {id(self.root): 0}
+        stack = [self.root]
+        pid = 0
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node is self.root:
+                continue
+            ids[id(node)] = nid = len(nodes) + 1
+            payloads = []
+            for bid in self.kv.table.get(node.rid, []):
+                payload = self.kv.block_payload(bid)
+                if payload is None:
+                    payloads.append(None)
+                else:
+                    store.write_layer(pid, payload, flush_meta=False)
+                    payloads.append(pid)
+                    pid += 1
+            nodes.append({"id": nid, "parent": ids[id(node.parent)],
+                          "blocks": [list(b) for b in node.blocks],
+                          "last_used": node.last_used,
+                          "payloads": payloads})
+        store.flush_meta()
+        self.kv.ssd.bytes_read, self.kv.ssd.reads = read0, reads0
+        with open(os.path.join(dir_path, "tree.json"), "w") as f:
+            json.dump({"block_tokens": self.block_tokens,
+                       "nodes": nodes}, f)
+        return {"nodes": len(nodes), "payload_blocks": pid}
+
+    def load(self, dir_path: str) -> Dict[str, int]:
+        """Rebuild a :meth:`save`-d tree into this (empty) cache. Every
+        reloaded node's blocks are created *flash-resident* in the
+        TieredKVCache (`adopt_external`): the warm-started server pays
+        real NVMe reads + modeled promotion seconds on first hit, and
+        match results are identical to the pre-restart tree's."""
+        import json
+        import os
+        from repro.core.cache.ssd_tier import SSDTier
+        assert self.nodes == 0, "load() requires an empty prefix cache"
+        with open(os.path.join(dir_path, "tree.json")) as f:
+            spec = json.load(f)
+        assert spec["block_tokens"] == self.block_tokens, \
+            "persisted tree has a different KV block granularity"
+        store = SSDTier(dir_path)
+        by_id: Dict[int, RadixNode] = {0: self.root}
+        tok0 = {0: 0}
+        loaded_payloads = 0
+        for entry in sorted(spec["nodes"], key=lambda e: e["id"]):
+            parent = by_id[entry["parent"]]
+            blocks = [tuple(b) for b in entry["blocks"]]
+            node = RadixNode(rid=self._next_node_rid, blocks=blocks,
+                             parent=parent,
+                             last_used=float(entry["last_used"]))
+            self._next_node_rid -= 1
+            payloads = []
+            for pid in entry["payloads"]:
+                banks = {} if pid is None else \
+                    {k: np.array(v) for k, v in
+                     store.read_layer(int(pid)).items()}
+                if banks:
+                    payloads.append(banks)
+                    loaded_payloads += 1
+                else:
+                    # missing files (e.g. an interrupted save) degrade to
+                    # a structure-only block: the restore gate rejects it
+                    # and hits recompute instead of serving zeroed KV
+                    payloads.append(None)
+            self.kv.adopt_external(node.rid, payloads,
+                                   tok0=tok0[entry["parent"]])
+            tok0[entry["id"]] = tok0[entry["parent"]] \
+                + len(blocks) * self.block_tokens
+            parent.children[blocks[0]] = node
+            by_id[entry["id"]] = node
+            self.nodes += 1
+            self.cached_tokens += node.ntokens
+        self._reclaim(now=0.0)
+        return {"nodes": len(spec["nodes"]),
+                "payload_blocks": loaded_payloads}
 
     def stats(self) -> Dict[str, float]:
         return {

@@ -245,8 +245,16 @@ class ContinuousBatchScheduler:
                 dram_capacity_bytes=dram_kv_gb * 2**30,
                 ssd_dir=os.path.join(engine._ssd_dir, "kv"), hw=engine.hw,
                 bytes_per_token=engine.kv_bytes_per_token(),
-                prefetch=engine.prefetch if kv_prefetch else None)
+                block_tokens=getattr(engine, "kv_block_tokens", 16),
+                prefetch=engine.prefetch if kv_prefetch else None,
+                store_payloads=getattr(engine, "supports_kv_payloads",
+                                       False))
         self.kv = kv
+        # real KV restore across requests needs the cache and the engine
+        # to agree on block granularity (block-chunked prefill boundaries
+        # must line up with cached block boundaries)
+        self._real_restore = kv.store_payloads and \
+            kv.block_tokens == getattr(engine, "kv_block_tokens", None)
         # predictive KV promotion only works when the cache carries the
         # shared DMA engine (a caller-supplied kv may not)
         self.kv_prefetch = kv_prefetch and kv.prefetch is not None
@@ -286,6 +294,7 @@ class ContinuousBatchScheduler:
                 kv.ensure_resident(req.rid, protect, now=eng.clock))
         else:
             hit = 0
+            prefix_kv = None
             if self.prefix is not None and req.prompt is not None:
                 # radix lookup: lock the hit path (refs + HBM pins) and
                 # pay its residency transfers — a DRAM/SSD-parked prefix
@@ -296,9 +305,22 @@ class ContinuousBatchScheduler:
                 for nrid in self.prefix.node_rids(req.rid):
                     eng.advance_clock(
                         kv.ensure_resident(nrid, protect, now=eng.clock))
+                if hit and self._real_restore:
+                    # now resident: hand the hit path's actual KV bytes
+                    # to the engine, which restores them into the fresh
+                    # cache and prefills only the suffix chunks
+                    prefix_kv = [p for nrid in
+                                 self.prefix.node_rids(req.rid)
+                                 for p in kv.payloads_for(nrid)]
             req.session = eng.begin_prefill(
                 req.prompt, rid=req.rid, prompt_len=req.prompt_len,
-                max_new_tokens=req.max_new_tokens, prefix_hit=hit)
+                max_new_tokens=req.max_new_tokens, prefix_hit=hit,
+                prefix_kv=prefix_kv)
+            # origin = the hit the engine actually accepted (it may clamp
+            # a malformed one), so the request's own blocks' token grid
+            # always matches the session positions they export/import
+            kv.set_origin(req.rid, req.session.prefix_hit)
+            kv.register_provider(req.rid, eng.kv_provider(req.session))
             req.prefix_hit = req.session.prefix_hit
             req.prompt_done = req.session.prompt_done
             req.admitted_s = eng.clock - self._t0

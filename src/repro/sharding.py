@@ -14,7 +14,6 @@ Axis conventions (see DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import numpy as np

@@ -1,7 +1,6 @@
 """Training loop: jit'd train_step factory + simple host loop."""
 from __future__ import annotations
 
-import functools
 import time
 from typing import Optional
 

@@ -2,8 +2,6 @@
 CPU device; multi-device sharding checks run in a subprocess (see
 test_sharding.py) so the main process never locks a 512-device backend."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 

@@ -17,8 +17,8 @@ import pytest
 from repro.core.cache.preloader import (PCIE_CHANNEL, SSD_CHANNEL,
                                         PrefetchEngine)
 from repro.core.engine import M2CacheEngine
-from repro.serving import (ContinuousBatchScheduler, ServingRequest,
-                           poisson_trace, requests_from_trace)
+from repro.serving import (ContinuousBatchScheduler, poisson_trace,
+                           requests_from_trace)
 
 
 # ---------------------------------------------------------------------------
@@ -174,9 +174,11 @@ def test_kv_prefetch_identical_tokens_and_no_slower(tmp_path, tiny_model):
     any generated token and must not inflate the modeled span. Tight KV
     budgets force preempt/resume so prefetch actually fires."""
     cfg, params = tiny_model
+    # budgets sized against *real* KV bytes (the tiered cache pages the
+    # actual tensor payloads): ~4 HBM blocks / ~3 DRAM blocks
     kw = dict(prompt_lens=(8, 16, 12, 9, 14, 10),
               gen_lens=(6, 10, 8, 7, 9, 6), max_batch=4,
-              hbm_kv_gb=1.5e-4, dram_kv_gb=1e-4)
+              hbm_kv_gb=7.5e-5, dram_kv_gb=5e-5)
     eng_p, rep_p = _serve(tmp_path, "pf", cfg, params, batched=True,
                           kv_prefetch=True, **kw)
     eng_n, rep_n = _serve(tmp_path, "sync", cfg, params, batched=True,

@@ -1,10 +1,8 @@
 """Multi-level cache invariants: ATU/LRU/none HBM policies, two-level DRAM
 FIFO, SSD tier round-trip, preloader overlap, manager clock, and the
 ZeRO-Inference baseline model. Property tests via hypothesis."""
-import os
 
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.cache.dram_cache import DRAMCache
@@ -46,7 +44,6 @@ def test_atu_resident_equals_last_active_set(f, k, steps, seed):
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 999))
 def test_atu_bytes_priced_per_tier(seed):
-    rng = np.random.default_rng(seed)
     d = 64
     unit = LayerCacheUnit(capacity=8, d_model=d, policy="atu")
     a1 = list(range(8))

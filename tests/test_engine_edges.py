@@ -16,7 +16,6 @@ from repro.core.hw import HOST
 
 def test_overlap_zero_resamples_everything():
     pr = OverlapProcess(f=64, k=16, overlap=0.0, seed=3)
-    prev = set(int(i) for i in pr.current)
     for _ in range(5):
         cur = set(int(i) for i in pr.step())
         assert len(cur) == 16

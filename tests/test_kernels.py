@@ -147,7 +147,7 @@ def test_mp_glu_ffn_composed(act, key):
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                atol=1e-4, rtol=1e-4)
     # and it approximates the dense-masked fp FFN within quant noise
-    from repro.models.common import activation, glu_ffn
+    from repro.models.common import activation
     mask = jnp.zeros((ff,), bool).at[idx].set(True)
     h = activation(act)(x @ wg) * (x @ wu)
     y_dense = (jnp.where(mask, h, 0) @ wd)

@@ -1,0 +1,280 @@
+"""Real KV residency through the HBM/DRAM/SSD tiers + flash-persistent
+prefix tree.
+
+Acceptance properties:
+
+* a KV block's payload round-trips the tiers **bit-exact** — demotion
+  device_gets (and scrubs) the owning session's bytes, DRAM holds real
+  host arrays, flash spills write real files, and promotion delivers
+  the same bits back;
+* real-tiny decode tokens are byte-identical across residency paths:
+  all-HBM vs forced DRAM/SSD demotion (the scrub makes a broken
+  restore corrupt decode instead of silently passing), and suffix-only
+  prefill from a restored prefix hit vs full recompute;
+* a saved radix tree reloads with identical match results, its blocks
+  flash-resident, and serves byte-identical tokens after the simulated
+  restart.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.engine import M2CacheEngine
+from repro.serving import (ContinuousBatchScheduler, requests_from_trace,
+                           shared_prefix_trace)
+from repro.serving.kv_cache import TieredKVCache
+from repro.serving.workload import ArrivalEvent
+
+
+# ---------------------------------------------------------------------------
+# TieredKVCache payload plumbing (no jax: a fake provider stands in for
+# the session pytree)
+
+
+class _ArrayProvider:
+    """Backs each block with a deterministic array; records scrubs and
+    verifies imports deliver exactly the exported bits."""
+
+    def __init__(self, bt: int):
+        self.bt = bt
+        self.scrubbed = []
+        self.imported = {}
+
+    def _arr(self, tok0):
+        rng = np.random.default_rng(tok0 + 1)
+        return rng.standard_normal((self.bt, 8)).astype(np.float32)
+
+    def export(self, tok0, ntokens, *, scrub=False):
+        assert ntokens == self.bt
+        if scrub:
+            self.scrubbed.append(tok0)
+        return {"k": self._arr(tok0), "v": self._arr(tok0) * -1.0}
+
+    def import_(self, tok0, payload):
+        np.testing.assert_array_equal(payload["k"], self._arr(tok0))
+        np.testing.assert_array_equal(payload["v"], self._arr(tok0) * -1.0)
+        self.imported[tok0] = payload
+
+
+def _kv(tmp_path, *, hbm_blocks, dram_blocks, block_tokens=4,
+        bytes_per_token=256.0):
+    bb = block_tokens * bytes_per_token
+    return TieredKVCache(
+        num_layers=2, d_model=8,
+        hbm_capacity_bytes=hbm_blocks * bb,
+        dram_capacity_bytes=dram_blocks * bb,
+        ssd_dir=str(tmp_path / "kv"), block_tokens=block_tokens,
+        bytes_per_token=bytes_per_token, store_payloads=True)
+
+
+def test_kv_block_payload_roundtrip_through_dram_and_ssd(tmp_path):
+    """swap_out captures + scrubs real bytes, the DRAM→SSD spill writes
+    real files, and ensure_resident imports the exact same bits."""
+    kv = _kv(tmp_path, hbm_blocks=4, dram_blocks=1)
+    prov = _ArrayProvider(kv.block_tokens)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 8, protect=[0])              # 2 blocks
+    kv.swap_out(0)                           # demote both: capture+scrub
+    assert prov.scrubbed == [0, 4]
+    tiers = sorted(kv.blocks[b].tier for b in kv.table[0])
+    assert tiers == ["dram", "ssd"]          # DRAM holds 1, spill to flash
+    assert kv.ssd.bytes_written > 0          # real file I/O
+    dt = kv.ensure_resident(0, protect=[0])
+    assert dt > 0.0                          # paging charged to the clock
+    assert sorted(prov.imported) == [0, 4]   # bit-exact (asserted inside)
+    assert all(kv.blocks[b].tier == "hbm" for b in kv.table[0])
+    # after promotion the host copies are released back to the session
+    assert all(kv.blocks[b].data is None for b in kv.table[0])
+
+
+def test_kv_materialize_and_adopted_payloads_survive_owner_free(tmp_path):
+    """Donation path: materialize captures host copies without scrubbing;
+    adopted (node-owned) blocks keep serving payloads after the donor is
+    freed and after aging to flash."""
+    kv = _kv(tmp_path, hbm_blocks=8, dram_blocks=1)
+    prov = _ArrayProvider(kv.block_tokens)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 8, protect=[0])
+    kv.materialize(0, 0, 2)
+    assert prov.scrubbed == []               # donor keeps reading them
+    kv.adopt_blocks(0, -2, 2)
+    kv.free(0)                               # donor gone; node blocks live
+    pays = kv.payloads_for(-2)
+    assert len(pays) == 2 and all(p is not None for p in pays)
+    np.testing.assert_array_equal(pays[0]["k"], prov._arr(0))
+    # age the node blocks all the way to flash (DRAM fits only one block,
+    # so the demotion spills the other to files) and read them back
+    kv.swap_out(-2)
+    assert any(kv.blocks[b].tier == "ssd" for b in kv.table[-2])
+    pays2 = kv.payloads_for(-2)
+    np.testing.assert_array_equal(pays2[0]["k"], prov._arr(0))
+    np.testing.assert_array_equal(pays2[1]["v"], prov._arr(4) * -1.0)
+
+
+def test_kv_adopt_external_lands_flash_resident(tmp_path):
+    """Persistence load path: externally-held payloads become SSD-tier
+    blocks whose first promotion pays NVMe+PCIe and delivers the bits."""
+    kv = _kv(tmp_path, hbm_blocks=8, dram_blocks=4)
+    prov = _ArrayProvider(kv.block_tokens)
+    payloads = [prov.export(0, 4), prov.export(4, 4)]
+    kv.adopt_external(-3, payloads)
+    assert [kv.blocks[b].tier for b in kv.table[-3]] == ["ssd", "ssd"]
+    assert kv.tokens[-3] == 8
+    dt = kv.ensure_resident(-3, protect=[])
+    assert dt > 0.0
+    got = kv.payloads_for(-3)
+    np.testing.assert_array_equal(got[0]["k"], prov._arr(0))
+    np.testing.assert_array_equal(got[1]["k"], prov._arr(4))
+
+
+# ---------------------------------------------------------------------------
+# real-tiny: byte-identical tokens across residency paths
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config("qwen2.5-14b", tiny=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32,
+                           m2=True)
+    return cfg, params
+
+
+def _serve(tmp_path, tag, cfg, params, *, hbm_kv_gb, dram_kv_gb):
+    eng = M2CacheEngine(cfg=cfg, params=params, dram_capacity_gb=0.5,
+                        ssd_dir=str(tmp_path / tag))
+    events = [ArrivalEvent(rid=i, arrival_s=0.0, prompt_len=pl,
+                           max_new_tokens=gl)
+              for i, (pl, gl) in enumerate(zip((18, 16, 12, 19, 14, 10),
+                                               (6, 10, 8, 7, 9, 6)))]
+    reqs = requests_from_trace(events, vocab_size=cfg.vocab_size)
+    sched = ContinuousBatchScheduler(eng, max_batch=4,
+                                     hbm_kv_gb=hbm_kv_gb,
+                                     dram_kv_gb=dram_kv_gb)
+    rep = sched.run(reqs)
+    return rep, {r.rid: list(r.session.tokens) for r in rep.requests}
+
+
+@pytest.mark.slow
+def test_forced_demotion_tokens_identical_real(tmp_path, tiny_model):
+    """All-HBM vs KV budgets tight enough to force preemption and a real
+    DRAM→SSD spill: demotion scrubs the device bytes, so identical
+    tokens prove promotion restored them bit-for-bit."""
+    cfg, params = tiny_model
+    rep_roomy, toks_roomy = _serve(tmp_path, "roomy", cfg, params,
+                                   hbm_kv_gb=0.5, dram_kv_gb=1.0)
+    rep_tight, toks_tight = _serve(tmp_path, "tight", cfg, params,
+                                   hbm_kv_gb=0.8e-4, dram_kv_gb=1.6e-5)
+    assert rep_roomy.preemptions == 0
+    assert rep_tight.preemptions > 0
+    assert rep_tight.kv_stats["kv_ssd_write_bytes"] > 0   # real flash leg
+    assert rep_tight.kv_stats["kv_ssd_read_bytes"] > 0
+    assert toks_roomy == toks_tight
+
+
+@pytest.mark.slow
+def test_suffix_prefill_from_prefix_hit_byte_identical(tmp_path,
+                                                       tiny_model):
+    """Prefix hits restore the matched radix blocks' actual KV into the
+    admitted request's cache and run prefill only on the suffix chunks;
+    tokens must match the full-recompute (cache off) run byte for byte,
+    and the engine must report genuinely restored tokens."""
+    cfg, params = tiny_model
+    events = shared_prefix_trace(6, rate_rps=1e6, num_groups=2,
+                                 prefix_len=24, reuse_ratio=0.8,
+                                 suffix_len=(3, 6), gen_len=(3, 5),
+                                 vocab_size=cfg.vocab_size, seed=3)
+    events = [dataclasses.replace(e, arrival_s=0.0) for e in events]
+
+    def run(tag, prefix):
+        eng = M2CacheEngine(cfg=cfg, params=params, dram_capacity_gb=0.5,
+                            ssd_dir=str(tmp_path / tag))
+        sched = ContinuousBatchScheduler(eng, max_batch=4,
+                                         prefill_chunk=8,
+                                         prefix_caching=prefix)
+        reps = [sched.run(requests_from_trace(events,
+                                              vocab_size=cfg.vocab_size))
+                for _ in range(2)]
+        toks = [{r.rid: list(r.session.tokens) for r in rep.requests}
+                for rep in reps]
+        return eng, reps, toks
+
+    eng_off, _, toks_off = run("off", False)
+    eng_on, reps_on, toks_on = run("on", True)
+    assert toks_off == toks_on
+    assert eng_off.prefix_restored_tokens == 0
+    assert eng_on.prefix_restored_tokens > 0      # suffix-only prefill ran
+    assert reps_on[1].prefix_stats["prefix_hit_tokens"] > 0
+    # restored hits execute fewer prefill chunks than full recompute
+    assert reps_on[1].prefill_dispatches < reps_on[0].prefill_dispatches \
+        or eng_on.prefix_restored_tokens >= \
+        reps_on[1].prefix_stats["prefix_hit_tokens"]
+
+
+@pytest.mark.slow
+def test_prefix_tree_save_load_identical_matches_and_tokens(tmp_path,
+                                                            tiny_model):
+    """A saved tree reloads with identical match results, its blocks
+    flash-resident; a restarted server serves byte-identical tokens and
+    a nonzero first-pass hit rate."""
+    cfg, params = tiny_model
+    events = shared_prefix_trace(6, rate_rps=1e6, num_groups=2,
+                                 prefix_len=32, reuse_ratio=1.0,
+                                 suffix_len=(3, 6), gen_len=(3, 5),
+                                 vocab_size=cfg.vocab_size, seed=4)
+    events = [dataclasses.replace(e, arrival_s=0.0) for e in events]
+    persist = tmp_path / "tree"
+
+    def lifetime(tag, load=False, save=False):
+        eng = M2CacheEngine(cfg=cfg, params=params, dram_capacity_gb=0.5,
+                            ssd_dir=str(tmp_path / tag))
+        sched = ContinuousBatchScheduler(eng, max_batch=4,
+                                         prefill_chunk=8,
+                                         prefix_caching=True)
+        if load:
+            sched.prefix.load(str(persist))
+        rep = sched.run(requests_from_trace(events,
+                                            vocab_size=cfg.vocab_size))
+        if save:
+            sched.prefix.save(str(persist))
+        return eng, sched, rep, {r.rid: list(r.session.tokens)
+                                 for r in rep.requests}
+
+    eng1, s1, rep1, toks1 = lifetime("a", save=True)
+    matches1 = {e.rid: s1.prefix.match(tuple(e.prompt_tokens)).hit_tokens
+                for e in events}
+
+    eng2, s2, rep2, toks2 = lifetime("b", load=True)
+    # before serving, a third scheduler's pristine loaded tree must match
+    eng3 = M2CacheEngine(cfg=cfg, params=params, dram_capacity_gb=0.5,
+                         ssd_dir=str(tmp_path / "c"))
+    s3 = ContinuousBatchScheduler(eng3, max_batch=4, prefix_caching=True)
+    s3.prefix.load(str(persist))
+    matches3 = {e.rid: s3.prefix.match(tuple(e.prompt_tokens)).hit_tokens
+                for e in events}
+    assert matches3 == matches1               # identical match results
+    # reloaded subtree starts flash-resident
+    node_rids = [n.rid for n in _walk(s3.prefix.root)]
+    assert node_rids
+    assert all(s3.kv.blocks[b].tier == "ssd"
+               for r in node_rids for b in s3.kv.table[r])
+    # the restarted server hit the reloaded tree and decoded identically
+    assert toks2 == toks1
+    assert rep2.prefix_stats["prefix_hit_rate"] > 0
+    assert rep2.prefix_stats["prefix_hit_rate"] > \
+        rep1.prefix_stats["prefix_hit_rate"]
+    assert eng2.prefix_restored_tokens > eng1.prefix_restored_tokens
+
+
+def _walk(root):
+    out, stack = [], [root]
+    while stack:
+        n = stack.pop()
+        stack.extend(n.children.values())
+        if n is not root:
+            out.append(n)
+    return out

@@ -128,7 +128,6 @@ def _simulate_prefill(kv, rid, tokens, hit):
 
 def test_radix_match_insert_release_cycle(tmp_path):
     kv, pc = _prefix(tmp_path)
-    bt = kv.block_tokens                 # 4
     p1 = _toks(*range(10))               # blocks: (0..3) (4..7), tail 8,9
     m = pc.lock(0, p1)
     assert m.hit_tokens == 0
@@ -426,16 +425,20 @@ def test_batched_prefill_tokens_and_dispatches(tmp_path, tiny_model):
     launch fewer jit prefill graphs than one-per-session."""
     cfg, params = tiny_model
     events = _real_events(cfg, seed=2)
-    reps_ps, toks_ps, _ = _real_run(tmp_path, "ps", cfg, params, events,
-                                    prefix=True, bucket=1)
+    reps_ps, toks_ps, sched_ps = _real_run(tmp_path, "ps", cfg, params,
+                                           events, prefix=True, bucket=1)
     reps_bp, toks_bp, _ = _real_run(tmp_path, "bp", cfg, params, events,
                                     prefix=True, bucket=8)
     assert toks_ps == toks_bp
     ps_disp = sum(r.prefill_dispatches for r in reps_ps)
     bp_disp = sum(r.prefill_dispatches for r in reps_bp)
     assert bp_disp < ps_disp
-    # per-session launches one graph per request
-    assert ps_disp == sum(len(r.requests) for r in reps_ps)
+    # per-session execution launches one graph per KV-block chunk past
+    # the (restored) prefix hit; stacking packs those chunks into rows
+    bt = sched_ps.engine.kv_block_tokens
+    expected = sum((r.prompt_len + bt - 1) // bt - r.prefix_hit // bt
+                   for rep in reps_ps for r in rep.requests)
+    assert ps_disp == expected
     # batched pricing is never slower
     assert sum(r.modeled_span_s for r in reps_bp) <= \
         sum(r.modeled_span_s for r in reps_ps) * (1 + 1e-9)

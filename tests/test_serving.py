@@ -194,7 +194,6 @@ def test_kv_pressure_triggers_preemption_and_swaps(tmp_path):
 
 
 def test_scheduler_real_tiny_mode(tmp_path, key):
-    import jax
     import jax.numpy as jnp
     from repro.configs.base import get_config
     from repro.models import transformer as T

@@ -4,7 +4,6 @@ the paper, checkpoint round-trip, data pipeline contracts."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import get_config
 from repro.core.engine import M2CacheEngine
