@@ -14,9 +14,14 @@ Rules per metric (see ``METRICS``):
   * ``lower``  — fresh must stay <= baseline * (1 + tolerance)
 Metric paths are dotted into the JSON; ``a/b`` derives a ratio from two
 paths (e.g. a gCO2/request improvement ratio). Metrics whose baseline is
-0 or missing are skipped with a note (a degenerate baseline can't band a
-regression). All boolean entries of the fresh ``checks`` block must be
-true, as before.
+0 are skipped with a note (a degenerate baseline can't band a
+regression) — but a metric path *missing* from a baseline is an error:
+that is exactly what a silently-renamed summary key looks like, and this
+gate exists to catch it. Every dict in a baseline or fresh artifact that
+fingerprints as a ``ServingReport.summary()`` is additionally validated
+against ``repro.serving.schema``, so a key rename fails CI until the
+schema, the baselines and the metric paths all agree. All boolean
+entries of the fresh ``checks`` block must be true, as before.
 
 Usage:
   python scripts/check_bench.py --fresh DIR [--tolerance 0.25]
@@ -39,6 +44,10 @@ import tempfile
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 BENCH_DIR = ROOT / "benchmarks"
 
+sys.path.insert(0, str(ROOT / "src"))
+from repro.serving.schema import (looks_like_summary,  # noqa: E402
+                                  validate_summary)
+
 #: smoke invocations — the single source of truth (CI's bench job runs
 #: `check_bench.py --run --fresh bench-fresh` instead of spelling these
 #: out again)
@@ -49,6 +58,8 @@ SMOKE_RUNS = {
                           "--requests", "8", "--gen-len", "6"],
     "BENCH_restart.json": ["benchmarks/serving_restart.py",
                            "--requests", "8"],
+    "BENCH_obs.json": ["benchmarks/serving_obs.py",
+                       "--requests", "8"],
 }
 
 #: per-artifact regression metrics: (name, dotted path [or "a/b" ratio],
@@ -83,7 +94,36 @@ METRICS = {
         ("warm_restored_tokens",
          "systems.warm-restart.restored_tokens", "higher"),
     ],
+    "BENCH_obs.json": [
+        # the ratio gate: modeled throughput with tracing on must stay
+        # within the band of the bare run (the bench itself holds it
+        # to 3%; the band here only guards the committed baseline)
+        ("obs_tokens_per_s_ratio", "checks.tokens_per_s_ratio", "higher"),
+        ("traced_tok_s", "systems.on.tokens_per_s", "higher"),
+        ("traced_prefix_hit_rate", "systems.on.prefix_hit_rate",
+         "higher"),
+    ],
 }
+
+
+def validate_summaries(name: str, doc, context: str) -> list:
+    """Walk an artifact; schema-check every dict that claims to be a
+    ``ServingReport.summary()``. Returns error strings."""
+    errors = []
+    if isinstance(doc, dict):
+        if looks_like_summary(doc):
+            try:
+                validate_summary(doc, context=f"{name}:{context}")
+            except ValueError as e:
+                errors.append(str(e))
+        else:
+            for k, v in doc.items():
+                errors.extend(validate_summaries(name, v,
+                                                 f"{context}.{k}"))
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            errors.extend(validate_summaries(name, v, f"{context}[{i}]"))
+    return errors
 
 
 def _lookup(doc, path: str):
@@ -117,7 +157,14 @@ def compare(name: str, base: dict, fresh: dict, tol: float) -> list:
             errors.append(f"{name}: metric {mname!r} missing from "
                           "fresh run")
             continue
-        if b is None or b == 0.0:
+        if b is None:
+            # a missing baseline path is key drift (a renamed summary
+            # key), not a degenerate value — fail, don't skip
+            errors.append(f"{name}: metric {mname!r} missing from "
+                          f"committed baseline [{path}] — key drift? "
+                          "regenerate the baseline or fix the path")
+            continue
+        if b == 0.0:
             print(f"check_bench: {name}:{mname} skipped "
                   f"(degenerate baseline {b!r})")
             continue
@@ -174,6 +221,8 @@ def main():
             continue
         base = json.loads(base_path.read_text())
         fresh = json.loads(fresh_path.read_text())
+        errors.extend(validate_summaries(name, base, "baseline"))
+        errors.extend(validate_summaries(name, fresh, "fresh"))
         errors.extend(compare(name, base, fresh, args.tolerance))
 
     if errors:

@@ -9,6 +9,10 @@ Fails (exit 1) when:
   * a required serving topic (the prefix cache's radix tree,
     refcount and copy-on-write rules, carbon-aware admission) is
     missing from ``docs/SERVING.md``;
+  * a ``src/repro/obs/*.py`` module or a required observability topic
+    (the modeled-clock timebase, the Perfetto workflow, the
+    kv-block-trace replay format) is missing from
+    ``docs/OBSERVABILITY.md``;
   * a top-level ``src/repro/*`` package is not mentioned in
     ``docs/ARCHITECTURE.md`` — the module map must not rot;
   * README does not link every ``docs/*.md`` page;
@@ -54,6 +58,24 @@ def main():
             errors.append(
                 f"docs/SERVING.md does not document {topic!r} "
                 "(prefix-cache + residency rules must stay written down)")
+
+    obs_doc = (ROOT / "docs" / "OBSERVABILITY.md").read_text() \
+        if (ROOT / "docs" / "OBSERVABILITY.md").exists() else ""
+    if not obs_doc:
+        errors.append("docs/OBSERVABILITY.md is missing")
+    for mod in sorted((ROOT / "src" / "repro" / "obs").glob("*.py")):
+        if mod.name == "__init__.py":
+            continue
+        if mod.name not in obs_doc:
+            errors.append(
+                f"docs/OBSERVABILITY.md does not mention {mod.name}")
+    for topic in ("modeled clock", "Perfetto", "kv-block-trace",
+                  "trace_report.py", "event taxonomy",
+                  "carbon attribution", "overhead"):
+        if topic.lower() not in obs_doc.lower():
+            errors.append(
+                f"docs/OBSERVABILITY.md does not document {topic!r} "
+                "(the trace format + taxonomy must stay written down)")
 
     arch_doc = (ROOT / "docs" / "ARCHITECTURE.md").read_text() \
         if (ROOT / "docs" / "ARCHITECTURE.md").exists() else ""

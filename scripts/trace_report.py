@@ -1,0 +1,222 @@
+#!/usr/bin/env python
+"""Summarize a Chrome trace written by ``--trace-out``.
+
+Reconstructs, purely from the trace file (no access to the run's
+``ServingReport``):
+
+* per-request timelines — queue wait, prefill/decode/preempted phase
+  seconds, TTFT (``first_token`` instant minus ``queued`` span start)
+  and end-to-end latency;
+* tier-transfer breakdowns — KV block promote/demote/spill/evict
+  counts and bytes grouped by tier edge and cause;
+* DMA channel occupancy — busy vs stall seconds per channel
+  (``dma:ssd``, ``dma:pcie``) over the traced span;
+* carbon — cumulative gCO2 from the ``carbon`` counter track.
+
+The TTFT reconstruction is the observability subsystem's acceptance
+check: ``benchmarks/serving_obs.py`` asserts it matches the scheduler's
+own report to float tolerance. Usage::
+
+    PYTHONPATH=src python scripts/trace_report.py run.trace.json [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+from typing import Dict, List
+
+US = 1e6  # trace timestamps are microseconds of modeled time
+
+
+def load_trace(path: str) -> List[dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return doc["traceEvents"]
+
+
+def track_names(events: List[dict]) -> Dict[int, str]:
+    """tid -> track name, from the thread_name metadata events."""
+    return {e["tid"]: e["args"]["name"] for e in events
+            if e["ph"] == "M" and e.get("name") == "thread_name"}
+
+
+def request_timelines(events: List[dict]) -> Dict[int, dict]:
+    """Per-request lifecycle rebuilt from the ``req:<rid>`` tracks.
+
+    All times are modeled seconds relative to the request's arrival
+    (the start of its ``queued`` span), so they are directly comparable
+    with ``ServingRequest.ttft_s`` / ``latency_s``."""
+    names = track_names(events)
+    out: Dict[int, dict] = {}
+    for e in events:
+        track = names.get(e.get("tid"))
+        if track is None or not track.startswith("req:"):
+            continue
+        rid = int(track.split(":", 1)[1])
+        r = out.setdefault(rid, {"rid": rid, "phases": defaultdict(float),
+                                 "prefill_chunks": 0, "preemptions": 0})
+        name, ph = e["name"], e["ph"]
+        if ph == "X":
+            if name == "queued":
+                r["arrival_ts"] = e["ts"]
+                r["queue_wait_s"] = e["dur"] / US
+            else:
+                r["phases"][name] += e["dur"] / US
+                if name == "preempted":
+                    r["preemptions"] += 1
+        elif ph == "i":
+            if name == "first_token":
+                r["first_token_ts"] = e["ts"]
+            elif name == "finish":
+                r["finish_ts"] = e["ts"]
+                r["gco2_g"] = e["args"].get("gco2_g")
+            elif name == "prefill_chunk":
+                r["prefill_chunks"] += 1
+    for r in out.values():
+        t0 = r.get("arrival_ts")
+        if t0 is not None and "first_token_ts" in r:
+            r["ttft_s"] = (r["first_token_ts"] - t0) / US
+        if t0 is not None and "finish_ts" in r:
+            r["latency_s"] = (r["finish_ts"] - t0) / US
+        r["phases"] = dict(r["phases"])
+    return out
+
+
+def tier_transfers(events: List[dict]) -> Dict[str, dict]:
+    """KV block movement from the ``kv`` track instants, grouped by
+    ``prev->tier`` edge: event counts, bytes moved, and the causes."""
+    names = track_names(events)
+    out: Dict[str, dict] = {}
+    for e in events:
+        if e["ph"] != "i" or names.get(e.get("tid")) != "kv":
+            continue
+        a = e["args"]
+        edge = f"{a.get('prev') or '-'}->{a.get('tier')}"
+        g = out.setdefault(edge, {"events": 0, "bytes": 0,
+                                  "ops": defaultdict(int),
+                                  "causes": defaultdict(int)})
+        g["events"] += 1
+        g["bytes"] += int(a.get("nbytes") or 0)
+        g["ops"][e["name"]] += 1
+        g["causes"][a.get("cause") or "-"] += 1
+    for g in out.values():
+        g["ops"] = dict(g["ops"])
+        g["causes"] = dict(g["causes"])
+    return out
+
+
+def dma_occupancy(events: List[dict]) -> Dict[str, dict]:
+    """Busy/stall seconds and bytes per DMA channel track."""
+    names = track_names(events)
+    out: Dict[str, dict] = {}
+    for e in events:
+        track = names.get(e.get("tid"))
+        if track is None or not track.startswith("dma:") or e["ph"] != "X":
+            continue
+        ch = out.setdefault(track[4:], {"busy_s": 0.0, "stall_s": 0.0,
+                                        "bytes": 0, "transfers": 0,
+                                        "t_min": e["ts"], "t_max": e["ts"]})
+        dur = e["dur"] / US
+        if e["name"] == "xfer":
+            ch["busy_s"] += dur
+            ch["bytes"] += int(e["args"].get("nbytes") or 0)
+            ch["transfers"] += 1
+        elif e["name"] == "stall":
+            ch["stall_s"] += dur
+        ch["t_min"] = min(ch["t_min"], e["ts"])
+        ch["t_max"] = max(ch["t_max"], e["ts"] + e["dur"])
+    for ch in out.values():
+        span = (ch.pop("t_max") - ch.pop("t_min")) / US
+        ch["span_s"] = span
+        ch["occupancy"] = ch["busy_s"] / span if span > 0 else 0.0
+    return out
+
+
+def carbon_totals(events: List[dict]) -> dict:
+    """Final cumulative gCO2 from the ``carbon`` counter track."""
+    names = track_names(events)
+    last_t, out = None, {}
+    for e in events:
+        if e["ph"] != "C" or names.get(e.get("tid")) != "carbon" \
+                or e["name"] != "gco2":
+            continue
+        if last_t is None or e["ts"] >= last_t:
+            last_t = e["ts"]
+            out = {"gco2_total": e["args"]["oce_g"],
+                   "samples": out.get("samples", 0)}
+        out["samples"] = out.get("samples", 0) + 1
+    return out
+
+
+def report(path: str) -> dict:
+    events = load_trace(path)
+    return {
+        "trace": path,
+        "events": len(events),
+        "requests": request_timelines(events),
+        "tier_transfers": tier_transfers(events),
+        "dma": dma_occupancy(events),
+        "carbon": carbon_totals(events),
+    }
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}"
+        n /= 1024
+    return f"{n:.1f} GiB"
+
+
+def print_report(rep: dict):
+    reqs = rep["requests"]
+    print(f"{rep['trace']}: {rep['events']} events, "
+          f"{len(reqs)} requests")
+    print("\nper-request timelines (modeled seconds):")
+    print(f"{'rid':>4} {'queue':>8} {'prefill':>8} {'decode':>8} "
+          f"{'parked':>8} {'ttft':>8} {'latency':>8} {'gCO2':>10}")
+    for rid in sorted(reqs):
+        r = reqs[rid]
+        ph = r["phases"]
+        print(f"{rid:>4} {r.get('queue_wait_s', 0):>8.3f} "
+              f"{ph.get('prefill', 0):>8.3f} {ph.get('decode', 0):>8.3f} "
+              f"{ph.get('preempted', 0):>8.3f} "
+              f"{r.get('ttft_s', float('nan')):>8.3f} "
+              f"{r.get('latency_s', float('nan')):>8.3f} "
+              f"{r.get('gco2_g') if r.get('gco2_g') is not None else 0:>10.5f}")
+    if rep["tier_transfers"]:
+        print("\nKV tier transfers:")
+        for edge, g in sorted(rep["tier_transfers"].items()):
+            ops = ", ".join(f"{k}x{v}" for k, v in sorted(g["ops"].items()))
+            print(f"  {edge:>12}: {g['events']:>5} events  "
+                  f"{_fmt_bytes(g['bytes']):>10}  [{ops}]")
+    if rep["dma"]:
+        print("\nDMA channel occupancy:")
+        for ch, d in sorted(rep["dma"].items()):
+            print(f"  {ch:>6}: busy {d['busy_s']:.3f}s / "
+                  f"span {d['span_s']:.3f}s "
+                  f"({100 * d['occupancy']:.1f}%), "
+                  f"stall {d['stall_s']:.3f}s, "
+                  f"{d['transfers']} transfers, "
+                  f"{_fmt_bytes(d['bytes'])}")
+    if rep["carbon"]:
+        print(f"\ncarbon: {rep['carbon']['gco2_total']:.5f} gCO2 "
+              f"({rep['carbon']['samples']} samples)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace JSON from --trace-out")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON instead of a table")
+    args = ap.parse_args()
+    rep = report(args.trace)
+    if args.json:
+        print(json.dumps(rep, indent=1, default=float))
+    else:
+        print_report(rep)
+
+
+if __name__ == "__main__":
+    main()

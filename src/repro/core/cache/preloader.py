@@ -57,7 +57,17 @@ class PrefetchEngine:
         self._bw: Dict[str, float] = {}
         self._free_at: Dict[str, float] = {}
         self._inflight: Dict[object, Tuple[float, float]] = {}  # key -> (ready, bytes)
+        self._inflight_ch: Dict[object, str] = {}               # key -> channel
         self.stats = PrefetchStats()
+        # optional obs hook: one "dma:<channel>" span per transfer (its
+        # modeled bus occupancy) + a stall instant when the compute front
+        # catches an unfinished transfer
+        self._recorder = None
+
+    def attach_trace(self, recorder):
+        """Record every transfer as a span on track ``dma:<channel>`` in
+        ``recorder`` (a :class:`repro.obs.TraceRecorder`)."""
+        self._recorder = recorder
 
     def add_channel(self, name: str, bw: float):
         """Register (or re-register) a channel; idempotent per name."""
@@ -80,8 +90,13 @@ class PrefetchEngine:
         finish = start + nbytes / self._bw[channel]
         self._free_at[channel] = finish
         self._inflight[key] = (finish, float(nbytes))
+        self._inflight_ch[key] = channel
         self.stats.issued += 1
         self.stats.issued_bytes += nbytes
+        if self._recorder is not None:
+            self._recorder.span(f"dma:{channel}", "xfer", start, finish,
+                                key=str(key), nbytes=float(nbytes),
+                                issued_at=now)
         return finish
 
     def in_flight(self, key) -> bool:
@@ -103,12 +118,16 @@ class PrefetchEngine:
         rec = self._inflight.pop(key, None)
         if rec is None:
             return 0.0
+        channel = self._inflight_ch.pop(key, "?")
         ready, nbytes = rec
         self.stats.waits += 1
         stall = max(ready - now, 0.0)
         if stall > 0.0:
             self.stats.stall_s += stall
             self.stats.stalled_bytes += nbytes
+            if self._recorder is not None:
+                self._recorder.span(f"dma:{channel}", "stall", now, ready,
+                                    key=str(key), nbytes=float(nbytes))
         else:
             self.stats.hits += 1
             self.stats.overlapped_bytes += nbytes
@@ -118,6 +137,7 @@ class PrefetchEngine:
         """Drop an in-flight record (e.g. the block was evicted before
         use). Issued bytes stay counted — the bus time was spent."""
         self._inflight.pop(key, None)
+        self._inflight_ch.pop(key, None)
 
     def snapshot(self) -> PrefetchStats:
         return dataclasses.replace(self.stats)

@@ -257,15 +257,30 @@ class CarbonAccountant:
         self.ssd_j = 0.0
         self.oce_g = 0.0
         self._span = 0.0
+        # optional obs hook: per-slice gCO2 / intensity counter samples
+        # on the "carbon" track (recorder timestamps are *raw* engine
+        # seconds; charge() gets run-rebased times, so the owner passes
+        # its clock origin)
+        self._recorder = None
+        self._recorder_t0 = 0.0
+
+    def attach_trace(self, recorder, *, t0: float = 0.0):
+        """Emit a ``carbon`` counter sample per charged slice into
+        ``recorder`` (a :class:`repro.obs.TraceRecorder`). ``t0`` is the
+        raw-clock origin the caller's rebased slice times add to."""
+        self._recorder = recorder
+        self._recorder_t0 = float(t0)
 
     def charge(self, t0: float, dt: float, compute_s: float,
-               dram_gb: float, *, active: bool = True):
-        """Book one slice. ``active=False`` marks a drained interval (no
-        request in flight): the accelerator parks at deep idle instead of
-        the active floor — the state a carbon policy puts the server in
+               dram_gb: float, *, active: bool = True) -> float:
+        """Book one slice; returns the slice's operational gCO2 so the
+        caller can attribute it (per request / per phase).
+        ``active=False`` marks a drained interval (no request in
+        flight): the accelerator parks at deep idle instead of the
+        active floor — the state a carbon policy puts the server in
         during dirty-grid windows."""
         if dt <= 0.0:
-            return
+            return 0.0
         util = min(compute_s / dt, 1.0)
         frac = (ACTIVE_POWER_FLOOR + (1.0 - ACTIVE_POWER_FLOOR) * util) \
             if active else DEEP_IDLE_POWER_FRAC
@@ -275,11 +290,20 @@ class CarbonAccountant:
         # power is constant within the slice; the grid intensity may not
         # be — integrate it so multi-window slices are priced exactly
         weighted = self.trace.integral(t0, t0 + dt)
+        slice_g = (acc + dram + ssd) / dt / 3.6e6 * weighted
         self.accelerator_j += acc
         self.dram_j += dram
         self.ssd_j += ssd
-        self.oce_g += (acc + dram + ssd) / dt / 3.6e6 * weighted
+        self.oce_g += slice_g
         self._span += dt
+        if self._recorder is not None:
+            self._recorder.counter(
+                "carbon", "gco2", self._recorder_t0 + t0 + dt,
+                oce_g=self.oce_g, slice_g=slice_g)
+            self._recorder.counter(
+                "carbon", "grid_intensity", self._recorder_t0 + t0,
+                g_per_kwh=self.trace.intensity_at(t0))
+        return slice_g
 
     def totals(self, *, include_embodied: bool = True) -> Dict[str, float]:
         """Same keys as :func:`total_carbon`, plus the **energy-weighted**

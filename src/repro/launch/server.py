@@ -185,6 +185,22 @@ def main():
     ap.add_argument("--prefill-bucket", type=int, default=8,
                     help="max same-width prompts stacked into one vmapped "
                          "prefill dispatch (<=1: per-session prefill)")
+    # observability
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run "
+                         "(open in Perfetto / chrome://tracing): per-"
+                         "request phase spans, scheduler decisions, KV "
+                         "tier events, DMA transfers, carbon counters")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write serving metrics: Prometheus text format "
+                         "(.prom) plus periodic JSONL snapshots at "
+                         "PATH.jsonl on the modeled clock")
+    ap.add_argument("--metrics-interval", type=float, default=1.0,
+                    help="modeled seconds between metric snapshots "
+                         "(with --metrics-out)")
+    ap.add_argument("--block-trace-out", default=None, metavar="PATH",
+                    help="write the KV block-access trace (JSONL replay "
+                         "format for the replacement-policy simulator)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if not args.prefix_cache and (args.prefix_carbon_aware
@@ -200,6 +216,19 @@ def main():
     carbon_trace = build_trace(args)
     policy = make_policy(args.policy, trace=carbon_trace,
                          threshold_g_kwh=args.carbon_threshold)
+    recorder = metrics = block_trace = snapshotter = None
+    if args.trace_out:
+        from repro.obs import TraceRecorder
+        recorder = TraceRecorder()
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry, PeriodicSnapshotter
+        metrics = MetricsRegistry()
+        snapshotter = PeriodicSnapshotter(
+            metrics, args.metrics_out + ".jsonl",
+            interval_s=args.metrics_interval)
+    if args.block_trace_out:
+        from repro.obs import BlockTraceCollector
+        block_trace = BlockTraceCollector()
     sched = ContinuousBatchScheduler(eng, max_batch=args.max_batch,
                                      hbm_kv_gb=args.hbm_kv_gb,
                                      dram_kv_gb=args.dram_kv_gb,
@@ -211,7 +240,10 @@ def main():
                                      prefix_capacity_tokens=
                                      args.prefix_capacity,
                                      prefix_carbon_aware=
-                                     args.prefix_carbon_aware)
+                                     args.prefix_carbon_aware,
+                                     trace=recorder, metrics=metrics,
+                                     block_trace=block_trace,
+                                     snapshotter=snapshotter)
     persist = {}
     if args.prefix_persist:
         import os
@@ -220,14 +252,27 @@ def main():
     rep = sched.run(reqs)
     if args.prefix_persist:
         persist["saved"] = sched.prefix.save(args.prefix_persist)
-    print(json.dumps({
+    obs = {}
+    if recorder is not None:
+        recorder.export_chrome(args.trace_out)
+        obs.update(recorder.stats())
+    if metrics is not None:
+        snapshotter.close(eng.clock)
+        metrics.export_prometheus(args.metrics_out)
+    if block_trace is not None:
+        block_trace.export_jsonl(args.block_trace_out)
+        obs.update(block_trace.stats())
+    out = {
         "summary": rep.summary(),
         "kv": rep.kv_stats,
         "cache": rep.cache_stats,
         "prefix": rep.prefix_stats,
         "persist": persist,
         "carbon_g": rep.carbon,
-    }, indent=1, default=float))
+    }
+    if obs:
+        out["obs"] = obs
+    print(json.dumps(out, indent=1, default=float))
 
 
 if __name__ == "__main__":

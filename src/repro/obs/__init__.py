@@ -1,0 +1,22 @@
+"""Observability layer: tracing, metrics and block-access traces.
+
+``TraceRecorder`` (``obs/trace.py``) records spans / instants /
+counters on the modeled clock with Chrome ``trace_event`` export;
+``MetricsRegistry`` (``obs/metrics.py``) holds counters / gauges /
+histograms with JSON snapshots and a Prometheus-text exporter;
+``BlockTraceCollector`` (``obs/block_trace.py``) captures every KV
+block tier transition in the replay format the replacement-policy lab
+consumes. All of it is opt-in and free on the modeled clock — see
+``docs/OBSERVABILITY.md``.
+"""
+from repro.obs.block_trace import (BlockAccessEvent, BlockTraceCollector,
+                                   read_block_trace)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               PeriodicSnapshotter)
+from repro.obs.trace import TraceEvent, TraceRecorder
+
+__all__ = [
+    "BlockAccessEvent", "BlockTraceCollector", "Counter", "Gauge",
+    "Histogram", "MetricsRegistry", "PeriodicSnapshotter", "TraceEvent",
+    "TraceRecorder", "read_block_trace",
+]

@@ -12,6 +12,8 @@ from repro.serving.request import (SLO_CLASSES, RequestState, ServingRequest,
                                    SLOSpec)
 from repro.serving.scheduler import (ContinuousBatchScheduler, FCFSScheduler,
                                      Request, RequestQueue, ServingReport)
+from repro.serving.schema import (SUMMARY_OPTIONAL, SUMMARY_REQUIRED,
+                                  looks_like_summary, validate_summary)
 from repro.serving.workload import (ArrivalEvent, assign_slo_classes,
                                     bursty_trace, closed_trace,
                                     poisson_trace, requests_from_trace,
@@ -21,8 +23,10 @@ __all__ = [
     "ArrivalEvent", "CarbonAwarePolicy", "ContinuousBatchScheduler",
     "FCFSPolicy", "FCFSScheduler", "MatchResult", "PrefixCache",
     "RadixNode", "Request", "RequestQueue", "RequestState",
-    "SLOAwarePolicy", "SLOSpec", "SLO_CLASSES", "SchedulingPolicy",
-    "ServingReport", "ServingRequest", "TieredKVCache",
-    "assign_slo_classes", "bursty_trace", "closed_trace", "make_policy",
+    "SLOAwarePolicy", "SLOSpec", "SLO_CLASSES", "SUMMARY_OPTIONAL",
+    "SUMMARY_REQUIRED", "SchedulingPolicy", "ServingReport",
+    "ServingRequest", "TieredKVCache", "assign_slo_classes",
+    "bursty_trace", "closed_trace", "looks_like_summary", "make_policy",
     "poisson_trace", "requests_from_trace", "shared_prefix_trace",
+    "validate_summary",
 ]

@@ -147,6 +147,38 @@ class TieredKVCache:
         self.prefetch_overlap_bytes = 0.0
         self.prefetch_stall_s = 0.0
         self.resume_sync_s = 0.0         # serial (unprefetched) promotions
+        # obs hooks (attach_obs): None -> zero-cost no-ops
+        self._obs_trace = None           # repro.obs.TraceRecorder
+        self._obs_blocks = None          # repro.obs.BlockTraceCollector
+        self._obs_clock = None           # () -> raw modeled seconds
+
+    # ------------------------------------------------------------------
+    # observability: every tier transition as a block-access event
+
+    def attach_obs(self, *, trace=None, block_trace=None, clock=None):
+        """Attach a :class:`~repro.obs.TraceRecorder` (Chrome-trace ``kv``
+        instants) and/or a :class:`~repro.obs.BlockTraceCollector` (the
+        replay stream for the replacement-policy lab). ``clock`` returns
+        the current raw modeled time; events stamp it at emission.
+        Recording never moves the modeled clock."""
+        self._obs_trace = trace
+        self._obs_blocks = block_trace
+        self._obs_clock = clock
+
+    def _emit(self, op: str, blk: KVBlock, *, prev_tier=None, cause=None,
+              chrome: bool = True):
+        if self._obs_trace is None and self._obs_blocks is None:
+            return
+        t = self._obs_clock() if self._obs_clock is not None else 0.0
+        if self._obs_blocks is not None:
+            self._obs_blocks.emit(t, op, blk.bid, blk.rid, blk.tier,
+                                  prev_tier=prev_tier,
+                                  nbytes=int(blk.nbytes), tok0=blk.tok0,
+                                  cause=cause)
+        if self._obs_trace is not None and chrome:
+            self._obs_trace.instant("kv", op, t, bid=blk.bid, rid=blk.rid,
+                                    tier=blk.tier, prev=prev_tier,
+                                    cause=cause, nbytes=int(blk.nbytes))
 
     # ------------------------------------------------------------------
     def _payload(self) -> dict:
@@ -263,6 +295,7 @@ class TieredKVCache:
             self.ssd.write_layer(
                 bid, payload if payload is not None else self._payload(),
                 flush_meta=False)
+            self._emit("adopt", blk, chrome=False, cause="persist_load")
         self.ssd.bytes_written = written0     # startup copy, not a spill
         self.tokens[rid] = len(payloads) * self.block_tokens
 
@@ -287,9 +320,12 @@ class TieredKVCache:
             blk.data = None                    # canonical copy now on flash
             self.swap_out_bytes += blk.nbytes
             dt += blk.nbytes / self.hw.ssd_bw
+            self._emit("spill", blk, prev_tier="dram",
+                       cause="dram_pressure")
         return dt
 
-    def _demote(self, bid: int) -> float:
+    def _demote(self, bid: int, *, op: str = "evict",
+                cause: str = "hbm_pressure") -> float:
         """HBM → DRAM (spilling DRAM → SSD if the dynamic area is full).
         In real-residency mode the block's actual tensor bytes are pulled
         host-side (device_get) and the device copy scrubbed; otherwise a
@@ -308,6 +344,7 @@ class TieredKVCache:
                          else self._payload())
         blk.tier = "dram"
         self.swap_out_bytes += blk.nbytes
+        self._emit(op, blk, prev_tier="hbm", cause=cause)
         return dt + blk.nbytes / self.hw.pcie_bw
 
     def _evict_for(self, need_bytes: float, protect: Iterable[int]) -> float:
@@ -333,6 +370,7 @@ class TieredKVCache:
         blk = self.blocks[bid]
         dt = self._evict_for(blk.nbytes, protect)
         payload = None
+        prev = blk.tier
         if blk.tier == "dram":
             if blk.real:
                 payload = blk.data or self.dram.dynamic.get(bid)
@@ -351,6 +389,7 @@ class TieredKVCache:
         self.swap_in_bytes += blk.nbytes
         if blk.real:
             self._deliver(blk, payload)
+        self._emit("promote", blk, prev_tier=prev, cause="demand")
         return dt
 
     def _promote_async(self, bid: int, now: float) -> bool:
@@ -366,6 +405,7 @@ class TieredKVCache:
             return False
         not_before = 0.0
         payload = None
+        prev = blk.tier
         if blk.tier == "dram":
             if blk.real:
                 payload = blk.data or self.dram.dynamic.get(bid)
@@ -390,6 +430,7 @@ class TieredKVCache:
             # modeled asynchronously (ensure_resident charges the
             # residual stall of the in-flight transfer)
             self._deliver(blk, payload)
+        self._emit("promote", blk, prev_tier=prev, cause="prefetch")
         return True
 
     def _new_block(self, rid: int, protect: Iterable[int]) -> float:
@@ -404,6 +445,7 @@ class TieredKVCache:
         self.table.setdefault(rid, []).append(bid)
         self._hbm_lru[bid] = None
         self.hbm_used += self.block_bytes
+        self._emit("alloc", self.blocks[bid], chrome=False)
         return dt
 
     # ------------------------------------------------------------------
@@ -443,6 +485,11 @@ class TieredKVCache:
         for bid in self.table.get(rid, []):
             if bid in self._hbm_lru:
                 self._hbm_lru.move_to_end(bid)
+                if self._obs_blocks is not None:
+                    # read accesses feed the replay stream only (a
+                    # replacement-policy simulator needs them; the Chrome
+                    # trace would drown in them)
+                    self._emit("touch", self.blocks[bid], chrome=False)
 
     def prefetch_resident(self, rid: int, *, now: float) -> float:
         """Predictively promote a request's blocks toward HBM in the
@@ -494,7 +541,7 @@ class TieredKVCache:
         dt = 0.0
         for bid in self.table.get(rid, []):
             if self.blocks[bid].tier == "hbm":
-                dt += self._demote(bid)
+                dt += self._demote(bid, op="demote", cause="preempt")
         self.preempt_swaps += 1
         return self._charge(dt)
 
@@ -506,9 +553,13 @@ class TieredKVCache:
         blocks that running requests read every step). Pinning never
         *promotes* — callers pair it with :meth:`ensure_resident`."""
         self.pinned.add(rid)
+        for bid in self.table.get(rid, []):
+            self._emit("pin", self.blocks[bid], chrome=False)
 
     def unpin(self, rid: int):
         self.pinned.discard(rid)
+        for bid in self.table.get(rid, []):
+            self._emit("unpin", self.blocks[bid], chrome=False)
 
     def adopt_blocks(self, src_rid: int, dst_rid: int, nblocks: int, *,
                      start_block: int = 0):
@@ -524,6 +575,8 @@ class TieredKVCache:
         del blocks[start_block:start_block + nblocks]
         for bid in moved:
             self.blocks[bid].rid = dst_rid
+            self._emit("adopt", self.blocks[bid], chrome=False,
+                       cause=f"from:{src_rid}")
         self.table.setdefault(dst_rid, []).extend(moved)
         moved_tokens = nblocks * self.block_tokens
         self.tokens[src_rid] = max(self.tokens[src_rid] - moved_tokens, 0)
@@ -536,6 +589,7 @@ class TieredKVCache:
         self._next_tok0.pop(rid, None)
         for bid in self.table.pop(rid, []):
             blk = self.blocks.pop(bid)
+            self._emit("free", blk, chrome=False)
             if self.prefetch is not None:
                 self.prefetch.cancel(("kv", bid))
             if blk.tier == "hbm":

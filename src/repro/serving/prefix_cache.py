@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -67,6 +68,23 @@ from repro.core.carbon import CarbonIntensityTrace
 from repro.serving.kv_cache import TieredKVCache
 
 BlockKey = Tuple[int, ...]
+
+#: on-disk tree format. v2 added per-payload checksums + this version
+#: handshake; load() refuses anything else (v1 trees predate both and
+#: cannot be verified — recomputing their prefixes is always safe,
+#: serving silently corrupted KV never is).
+PERSIST_FORMAT_VERSION = 2
+
+
+def payload_checksum(banks: Dict[str, np.ndarray]) -> int:
+    """crc32 over a payload's arrays, keys sorted, dtype/shape mixed in —
+    a truncated, retyped or reshaped file fails verification too."""
+    h = 0
+    for k in sorted(banks):
+        a = np.ascontiguousarray(banks[k])
+        h = zlib.crc32(f"{k}:{a.dtype.str}:{a.shape}".encode(), h)
+        h = zlib.crc32(a.tobytes(), h)
+    return h
 
 
 @dataclasses.dataclass
@@ -137,6 +155,25 @@ class PrefixCache:
         self.insert_skips_carbon = 0
         self.reclaimed_tokens = 0
         self.splits = 0
+        self.load_rejects = 0
+        # obs hook (attach_obs): None -> zero-cost no-ops
+        self._obs_trace = None
+        self._obs_clock = None
+
+    # ------------------------------------------------------------------
+    def attach_obs(self, trace, clock=None):
+        """Emit hit/miss/insert/reclaim instants on the ``prefix`` track
+        of ``trace`` (a :class:`~repro.obs.TraceRecorder`). ``clock``
+        returns the current raw modeled time (the tree's own ``now``
+        arguments are run-rebased and would mis-place events)."""
+        self._obs_trace = trace
+        self._obs_clock = clock
+
+    def _obs(self, name: str, **args):
+        if self._obs_trace is None:
+            return
+        t = self._obs_clock() if self._obs_clock is not None else None
+        self._obs_trace.instant("prefix", name, t, **args)
 
     # ------------------------------------------------------------------
     def _query_blocks(self, tokens: Tuple[int, ...]) -> List[BlockKey]:
@@ -193,6 +230,9 @@ class PrefixCache:
         if m.hit_tokens:
             self.hit_requests += 1
             self.hit_tokens_total += m.hit_tokens
+        self._obs("hit" if m.hit_tokens else "miss", rid=rid,
+                  hit_tokens=m.hit_tokens, lookup_tokens=len(tokens),
+                  path_nodes=len(m.nodes))
         return m
 
     def node_rids(self, rid: int) -> List[int]:
@@ -281,6 +321,7 @@ class PrefixCache:
         donated blocks until it finishes). Returns donated tokens."""
         if not self._should_cache(now):
             self.insert_skips_carbon += 1
+            self._obs("insert_skip_carbon", rid=rid)
             return 0
         qb = self._query_blocks(tokens)
         path, matched, partial = self._walk(qb)
@@ -321,6 +362,7 @@ class PrefixCache:
         node.lockers.add(rid)
         self._locked.setdefault(rid, []).append(node)
         self.kv.pin(node.rid)
+        self._obs("insert", rid=rid, node_rid=node.rid, tokens=ntok)
         self._reclaim(now)
         return ntok
 
@@ -347,6 +389,8 @@ class PrefixCache:
             del parent.children[victim.blocks[0]]
             self.cached_tokens -= victim.ntokens
             self.reclaimed_tokens += victim.ntokens
+            self._obs("reclaim", node_rid=victim.rid,
+                      tokens=victim.ntokens)
             self.nodes -= 1
             if parent is not self.root and not parent.holders \
                     and parent.is_leaf():
@@ -387,44 +431,87 @@ class PrefixCache:
             if node is self.root:
                 continue
             ids[id(node)] = nid = len(nodes) + 1
-            payloads = []
+            payloads, checksums = [], []
             for bid in self.kv.table.get(node.rid, []):
                 payload = self.kv.block_payload(bid)
                 if payload is None:
                     payloads.append(None)
+                    checksums.append(None)
                 else:
                     store.write_layer(pid, payload, flush_meta=False)
                     payloads.append(pid)
+                    checksums.append(payload_checksum(payload))
                     pid += 1
             nodes.append({"id": nid, "parent": ids[id(node.parent)],
                           "blocks": [list(b) for b in node.blocks],
                           "last_used": node.last_used,
-                          "payloads": payloads})
+                          "payloads": payloads,
+                          "checksums": checksums})
         store.flush_meta()
         self.kv.ssd.bytes_read, self.kv.ssd.reads = read0, reads0
         with open(os.path.join(dir_path, "tree.json"), "w") as f:
-            json.dump({"block_tokens": self.block_tokens,
+            json.dump({"format_version": PERSIST_FORMAT_VERSION,
+                       "block_tokens": self.block_tokens,
                        "nodes": nodes}, f)
+        self._obs("save", nodes=len(nodes), payload_blocks=pid)
         return {"nodes": len(nodes), "payload_blocks": pid}
+
+    def _reject_load(self, reason: str) -> Dict[str, int]:
+        self.load_rejects += 1
+        self._obs("load_rejected", reason=reason)
+        return {"nodes": 0, "payload_blocks": 0, "rejected": reason}
 
     def load(self, dir_path: str) -> Dict[str, int]:
         """Rebuild a :meth:`save`-d tree into this (empty) cache. Every
         reloaded node's blocks are created *flash-resident* in the
         TieredKVCache (`adopt_external`): the warm-started server pays
         real NVMe reads + modeled promotion seconds on first hit, and
-        match results are identical to the pre-restart tree's."""
+        match results are identical to the pre-restart tree's.
+
+        Checksum + version handshake: every payload file is verified
+        against the crc recorded at save time *before anything is
+        adopted*. A version mismatch, a missing/truncated file or a crc
+        mismatch rejects the whole tree — the cache stays empty (prompts
+        recompute, which is always safe) and the result carries a
+        ``rejected`` reason; a ``load_rejected`` trace instant is
+        emitted when a recorder is attached."""
         import json
         import os
         from repro.core.cache.ssd_tier import SSDTier
         assert self.nodes == 0, "load() requires an empty prefix cache"
         with open(os.path.join(dir_path, "tree.json")) as f:
             spec = json.load(f)
-        assert spec["block_tokens"] == self.block_tokens, \
-            "persisted tree has a different KV block granularity"
+        version = spec.get("format_version")
+        if version != PERSIST_FORMAT_VERSION:
+            return self._reject_load(
+                f"format_version {version!r} != {PERSIST_FORMAT_VERSION}"
+                " (unverifiable tree)")
+        if spec["block_tokens"] != self.block_tokens:
+            return self._reject_load(
+                f"block_tokens {spec['block_tokens']} != "
+                f"{self.block_tokens} (different KV block granularity)")
         store = SSDTier(dir_path)
+        # pass 1 — verify every payload file before adopting anything
+        banks_by_pid: Dict[int, dict] = {}
+        for entry in spec["nodes"]:
+            for pid, crc in zip(entry["payloads"], entry["checksums"]):
+                if pid is None:
+                    continue
+                try:
+                    banks = {k: np.array(v) for k, v in
+                             store.read_layer(int(pid)).items()}
+                except (OSError, ValueError):
+                    return self._reject_load(
+                        f"payload {pid} unreadable")
+                if not banks:
+                    return self._reject_load(f"payload {pid} missing")
+                if payload_checksum(banks) != crc:
+                    return self._reject_load(
+                        f"payload {pid} checksum mismatch")
+                banks_by_pid[int(pid)] = banks
+        # pass 2 — adopt the verified tree
         by_id: Dict[int, RadixNode] = {0: self.root}
         tok0 = {0: 0}
-        loaded_payloads = 0
         for entry in sorted(spec["nodes"], key=lambda e: e["id"]):
             parent = by_id[entry["parent"]]
             blocks = [tuple(b) for b in entry["blocks"]]
@@ -432,19 +519,8 @@ class PrefixCache:
                              parent=parent,
                              last_used=float(entry["last_used"]))
             self._next_node_rid -= 1
-            payloads = []
-            for pid in entry["payloads"]:
-                banks = {} if pid is None else \
-                    {k: np.array(v) for k, v in
-                     store.read_layer(int(pid)).items()}
-                if banks:
-                    payloads.append(banks)
-                    loaded_payloads += 1
-                else:
-                    # missing files (e.g. an interrupted save) degrade to
-                    # a structure-only block: the restore gate rejects it
-                    # and hits recompute instead of serving zeroed KV
-                    payloads.append(None)
+            payloads = [None if pid is None else banks_by_pid[int(pid)]
+                        for pid in entry["payloads"]]
             self.kv.adopt_external(node.rid, payloads,
                                    tok0=tok0[entry["parent"]])
             tok0[entry["id"]] = tok0[entry["parent"]] \
@@ -454,8 +530,10 @@ class PrefixCache:
             self.nodes += 1
             self.cached_tokens += node.ntokens
         self._reclaim(now=0.0)
+        self._obs("load", nodes=len(spec["nodes"]),
+                  payload_blocks=len(banks_by_pid))
         return {"nodes": len(spec["nodes"]),
-                "payload_blocks": loaded_payloads}
+                "payload_blocks": len(banks_by_pid)}
 
     def stats(self) -> Dict[str, float]:
         return {
@@ -471,4 +549,5 @@ class PrefixCache:
             "prefix_insert_skips_carbon": self.insert_skips_carbon,
             "prefix_reclaimed_tokens": self.reclaimed_tokens,
             "prefix_splits": self.splits,
+            "prefix_load_rejects": self.load_rejects,
         }

@@ -78,6 +78,13 @@ class ServingRequest:
     preemptions: int = 0
     prefix_hit: int = 0                       # prompt tokens served by the
                                               # radix prefix cache
+    # operational gCO2 attributed to this request (scheduler splits each
+    # iteration's slice across the requests that did work in it,
+    # proportional to tokens processed; idle/overhead carbon stays
+    # unattributed — see docs/OBSERVABILITY.md)
+    gco2_g: float = 0.0
+    gco2_prefill_g: float = 0.0
+    gco2_decode_g: float = 0.0
     session: object = None                    # engine DecodeSession
     _true_prompt: Optional[tuple] = None      # memoized unpadded tokens
 

@@ -39,6 +39,7 @@ from repro.serving.kv_cache import TieredKVCache
 from repro.serving.policy import FCFSPolicy, SchedulingPolicy
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import RequestState, ServingRequest
+from repro.serving.schema import validate_summary
 
 
 # ---------------------------------------------------------------------------
@@ -191,10 +192,12 @@ class ServingReport:
             out["prefix_hit_tokens"] = \
                 self.prefix_stats["prefix_hit_tokens"]
         out.update(self.slo_summary())
-        if "mean_intensity_g_kwh" in self.carbon:
-            out["mean_intensity_g_kwh"] = \
-                self.carbon["mean_intensity_g_kwh"]
-        return out
+        out["mean_intensity_g_kwh"] = \
+            self.carbon["mean_intensity_g_kwh"]
+        # the schema module is the single source of truth for these keys
+        # (scripts/check_bench.py holds baselines to the same schema) —
+        # a renamed key fails here, not silently in a CI gate
+        return validate_summary(out)
 
 
 class ContinuousBatchScheduler:
@@ -217,6 +220,18 @@ class ContinuousBatchScheduler:
     the tree, and ``free`` releases the refs. The tree shares this
     scheduler's :class:`TieredKVCache` — cached prefixes page over the
     same HBM→DRAM→SSD tiers as live request KV.
+
+    Observability (all optional, all free on the modeled clock —
+    recording never advances it, so modeled tok/s and generated tokens
+    are identical with or without it): ``trace`` (a
+    :class:`repro.obs.TraceRecorder`) records per-request phase spans
+    (queued → prefill → decode, preemption parks), scheduler decisions,
+    KV/prefix/DMA events and per-step carbon counters; ``block_trace``
+    (a :class:`repro.obs.BlockTraceCollector`) records every KV block
+    tier transition in the replacement-policy-lab replay format;
+    ``metrics`` (a :class:`repro.obs.MetricsRegistry`) accumulates
+    serving counters/gauges/histograms, with ``snapshotter`` ticked
+    once per scheduler iteration on the modeled clock.
     """
 
     def __init__(self, engine, kv: Optional[TieredKVCache] = None, *,
@@ -230,7 +245,9 @@ class ContinuousBatchScheduler:
                  prefix_cache: Optional[PrefixCache] = None,
                  prefix_caching: bool = False,
                  prefix_capacity_tokens: int = 65536,
-                 prefix_carbon_aware: bool = False):
+                 prefix_carbon_aware: bool = False,
+                 trace=None, metrics=None, block_trace=None,
+                 snapshotter=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if prefill_chunk is not None and prefill_chunk < 1:
@@ -268,6 +285,61 @@ class ContinuousBatchScheduler:
                 carbon_trace=carbon_trace if prefix_carbon_aware else None)
         self.prefix = prefix_cache
         self._t0 = 0.0                   # run()'s clock origin
+        # -- observability wiring (purely passive: no clock advances) --
+        self.trace = trace
+        self.metrics = metrics
+        self.block_trace = block_trace
+        self.snapshotter = snapshotter
+        self._phase_spans: Dict[int, object] = {}  # rid -> open span id
+        clk = lambda: self.engine.clock
+        if trace is not None:
+            trace.set_default_clock(clk)
+            pf = getattr(engine, "prefetch", None)
+            if pf is not None:
+                pf.attach_trace(trace)
+            if self.prefix is not None:
+                self.prefix.attach_obs(trace, clk)
+        if trace is not None or block_trace is not None:
+            self.kv.attach_obs(trace=trace, block_trace=block_trace,
+                               clock=clk)
+        self._m = None
+        if metrics is not None:
+            self._m = {
+                "tokens": metrics.counter(
+                    "serving_tokens_total", "generated tokens"),
+                "finished": metrics.counter(
+                    "serving_requests_finished_total",
+                    "requests served to completion"),
+                "preemptions": metrics.counter(
+                    "serving_preemptions_total", "KV-pressure preemptions"),
+                "gco2": metrics.counter(
+                    "serving_gco2_total", "operational carbon (gCO2)"),
+                "ttft": metrics.histogram(
+                    "serving_ttft_seconds", "time to first token (modeled)"),
+                "latency": metrics.histogram(
+                    "serving_latency_seconds",
+                    "request latency (modeled)"),
+                "tpot": metrics.histogram(
+                    "serving_tpot_seconds",
+                    "mean time per output token (modeled)"),
+                "active": metrics.gauge(
+                    "serving_active_requests", "requests in the batch"),
+                "waiting": metrics.gauge(
+                    "serving_waiting_requests", "requests queued/preempted"),
+                "hbm_kv": metrics.gauge(
+                    "kv_hbm_used_bytes", "KV bytes resident in HBM"),
+            }
+
+    # -- per-request phase spans (queued → prefill → decode → finish) ----
+    def _obs_phase_begin(self, r: ServingRequest, name: str):
+        if self.trace is not None:
+            self._phase_spans[r.rid] = self.trace.span_begin(
+                f"req:{r.rid}", name)
+
+    def _obs_phase_end(self, r: ServingRequest, **args):
+        sid = self._phase_spans.pop(r.rid, None)
+        if sid is not None:
+            self.trace.span_end(sid, **args)
 
     # ------------------------------------------------------------------
     def _dram_gb(self) -> float:
@@ -292,6 +364,12 @@ class ContinuousBatchScheduler:
                         kv.ensure_resident(nrid, protect, now=eng.clock))
             eng.advance_clock(
                 kv.ensure_resident(req.rid, protect, now=eng.clock))
+            if self.trace is not None:
+                self._obs_phase_end(req)          # close "preempted"
+                self.trace.instant("sched", "resume", rid=req.rid,
+                                   mid_prefill=not req.prefilled)
+                self._obs_phase_begin(
+                    req, "decode" if req.prefilled else "prefill")
         else:
             hit = 0
             prefix_kv = None
@@ -324,6 +402,15 @@ class ContinuousBatchScheduler:
             req.prefix_hit = req.session.prefix_hit
             req.prompt_done = req.session.prompt_done
             req.admitted_s = eng.clock - self._t0
+            if self.trace is not None:
+                # the queue wait as a closed span: arrival → admission
+                self.trace.span(f"req:{req.rid}", "queued",
+                                self._t0 + req.arrival_s, eng.clock,
+                                rid=req.rid)
+                self.trace.instant("sched", "admit", rid=req.rid,
+                                   prefix_hit=req.prefix_hit)
+                self._obs_phase_begin(
+                    req, "decode" if req.prefilled else "prefill")
         req.state = RequestState.RUNNING if req.prefilled \
             else RequestState.PREFILLING
         active.append(req)
@@ -333,24 +420,35 @@ class ContinuousBatchScheduler:
         priced as a batched prefill step by the engine (stacked vmapped
         dispatches + dispatch-group weight pricing when the engine's
         ``prefill_bucket`` > 1). Returns (compute seconds, chunks
-        charged, stall seconds, overlapped bytes, prefill dispatches)."""
+        charged, stall seconds, overlapped bytes, prefill dispatches,
+        {rid: prompt tokens prefilled this step})."""
         eng, kv = self.engine, self.kv
         pf = [r for r in active if r.state is RequestState.PREFILLING]
         if not pf:
-            return 0.0, 0, 0.0, 0.0, 0
+            return 0.0, 0, 0.0, 0.0, 0, {}
+        t_pf0 = eng.clock
         before = {r.rid: r.session.prompt_done for r in pf}
         rep = eng.prefill_step([r.session for r in pf],
                                self.prefill_chunk)
         protect = [r.rid for r in active]
         chunks = 0
+        deltas: Dict[int, int] = {}
         for r in pf:
             delta = r.session.prompt_done - before[r.rid]
             if delta > 0:
                 eng.advance_clock(kv.extend(r.rid, delta, protect))
                 chunks += 1
+                deltas[r.rid] = delta
+                if self.trace is not None:
+                    self.trace.instant(f"req:{r.rid}", "prefill_chunk",
+                                       tokens=delta,
+                                       prompt_done=r.session.prompt_done)
             r.prompt_done = r.session.prompt_done
             if r.prefilled:
                 r.state = RequestState.RUNNING
+                if self.trace is not None:
+                    self._obs_phase_end(r)
+                    self._obs_phase_begin(r, "decode")
                 if self.prefix is not None and r.prompt is not None:
                     # donate the freshly-computed full prompt blocks to
                     # the radix tree (copy-on-write: ownership moves,
@@ -360,8 +458,12 @@ class ContinuousBatchScheduler:
                         r.rid, r.true_prompt(),
                         prefix_hit=r.prefix_hit,
                         now=eng.clock - self._t0)
+        if chunks and self.trace is not None:
+            self.trace.span("sched", "prefill_step", t_pf0, eng.clock,
+                            requests=len(pf), chunks=chunks,
+                            dispatches=rep.jit_dispatches)
         return (rep.compute_s, chunks, rep.stall_s,
-                rep.overlapped_bytes, rep.jit_dispatches)
+                rep.overlapped_bytes, rep.jit_dispatches, deltas)
 
     def _prefetch_ahead(self, waiting: List[ServingRequest], now: float):
         """Predict the next step's resident set and start promoting it.
@@ -401,6 +503,14 @@ class ContinuousBatchScheduler:
                 self.prefix.suspend(victim.rid)
             if victim.state is RequestState.PREFILLING:
                 mid += 1
+            if self.trace is not None:
+                self.trace.instant(
+                    "sched", "preempt", rid=victim.rid,
+                    mid_prefill=victim.state is RequestState.PREFILLING)
+                self._obs_phase_end(victim, preempted=True)
+                self._obs_phase_begin(victim, "preempted")
+            if self._m is not None:
+                self._m["preemptions"].inc()
             victim.state = RequestState.PREEMPTED
             victim.preemptions += 1
             waiting.append(victim)
@@ -433,6 +543,10 @@ class ContinuousBatchScheduler:
         accountant = carbon_mod.CarbonAccountant(
             device_name=eng.device_name, ssd_active=eng.use_ssd,
             trace=self.carbon_trace)
+        if self.trace is not None:
+            # accountant times are run-relative; counters land on the
+            # absolute engine clock like every other trace event
+            accountant.attach_trace(self.trace, t0=clock_start)
         # prefix counters are lifetime (the tree outlives runs); snapshot
         # so this run's report shows per-run rates, not cumulative ones
         prefix0 = self.prefix.stats() if self.prefix is not None else {}
@@ -467,9 +581,15 @@ class ContinuousBatchScheduler:
                         f"policy {self.policy.name!r} holds requests "
                         "without a holdoff_until time")
                 dt = max(min(targets) - now, 1e-9)
+                t_idle0 = eng.clock
                 eng.advance_clock(dt)
                 accountant.charge(now, dt, 0.0, self._dram_gb(),
                                   active=False)
+                if self.trace is not None:
+                    self.trace.span("sched", "idle", t_idle0, eng.clock,
+                                    waiting=len(waiting))
+                if self.snapshotter is not None:
+                    self.snapshotter.tick(eng.clock)
                 continue
             # admit in policy order up to max_batch; stop when the KV
             # budget says no (carbon-held requests are skipped, not
@@ -496,7 +616,7 @@ class ContinuousBatchScheduler:
                 self._admit(req, active)
             # one prefill chunk per prefilling request, then resolve KV
             # pressure (possibly preempting mid-prefill), then decode
-            comp, chunks, pf_stall, pf_overlap, pf_disp = \
+            comp, chunks, pf_stall, pf_overlap, pf_disp, pf_deltas = \
                 self._prefill_step(active)
             iter_compute += comp
             prefill_chunks += chunks
@@ -505,14 +625,20 @@ class ContinuousBatchScheduler:
             prefill_dispatches += pf_disp
             stall_s += pf_stall
             overlapped += pf_overlap
+            # keep refs to this iteration's prefillers before preemption
+            # can move them back to waiting — carbon attribution below
+            # still charges them for the work they did this step
+            by_rid = {r.rid: r for r in active}
             n, mid = self._preempt(active, waiting)
             preemptions += n
             mid_prefill_preemptions += mid
             running = [r for r in active if r.state is RequestState.RUNNING]
+            finished_now: List[ServingRequest] = []
             # issue next step's predicted KV promotions before decoding so
             # the transfers overlap this step's compute on the DMA clock
             self._prefetch_ahead(waiting, eng.clock - clock_start)
             if running:
+                t_dec0 = eng.clock
                 rep = eng.decode_step([r.session for r in running])
                 iter_compute += rep.compute_s
                 decode_steps += 1
@@ -526,6 +652,15 @@ class ContinuousBatchScheduler:
                     r.generated += 1
                     if r.first_token_s is None:
                         r.first_token_s = eng.clock - clock_start
+                        if self.trace is not None:
+                            self.trace.instant(f"req:{r.rid}",
+                                               "first_token",
+                                               ttft_s=r.ttft_s)
+                if self.trace is not None:
+                    self.trace.span("sched", "decode_step", t_dec0,
+                                    eng.clock, batch=len(running))
+                if self._m is not None:
+                    self._m["tokens"].inc(len(running))
                 for r in running:
                     if r.done:
                         r.state = RequestState.FINISHED
@@ -536,9 +671,52 @@ class ContinuousBatchScheduler:
                         kv.free(r.rid)
                         finished.append(r)
                         active.remove(r)
-            accountant.charge(iter_clock0 - clock_start,
-                              eng.clock - iter_clock0, iter_compute,
-                              self._dram_gb())
+                        finished_now.append(r)
+            slice_g = accountant.charge(iter_clock0 - clock_start,
+                                        eng.clock - iter_clock0,
+                                        iter_compute, self._dram_gb())
+            # split this iteration's carbon across the requests that did
+            # work in it, proportional to tokens processed (prefill
+            # chunks + one decode token per running request)
+            iter_work = [(by_rid[rid], "prefill", d)
+                         for rid, d in pf_deltas.items()] \
+                + [(r, "decode", 1) for r in running]
+            tot = sum(w for _, _, w in iter_work)
+            if slice_g > 0.0 and tot > 0:
+                for r, phase, w in iter_work:
+                    g = slice_g * w / tot
+                    r.gco2_g += g
+                    if phase == "prefill":
+                        r.gco2_prefill_g += g
+                    else:
+                        r.gco2_decode_g += g
+                if self._m is not None:
+                    self._m["gco2"].inc(slice_g)
+            # finish events fire *after* carbon attribution so the
+            # instant's gco2_g carries the request's full footprint
+            for r in finished_now:
+                if self.trace is not None:
+                    self._obs_phase_end(r, generated=r.generated)
+                    self.trace.instant(f"req:{r.rid}", "finish",
+                                       latency_s=r.latency_s,
+                                       gco2_g=r.gco2_g)
+                if self._m is not None:
+                    self._m["finished"].inc()
+                    self._m["ttft"].observe(r.ttft_s)
+                    self._m["latency"].observe(r.latency_s)
+                    self._m["tpot"].observe(r.tpot_s)
+            if self.trace is not None:
+                self.trace.counter("sched", "queue", active=len(active),
+                                   waiting=len(waiting))
+                self.trace.counter("kv", "kv_bytes",
+                                   hbm=kv.hbm_used,
+                                   dram=kv.dram.used_bytes)
+            if self._m is not None:
+                self._m["active"].set(len(active))
+                self._m["waiting"].set(len(waiting))
+                self._m["hbm_kv"].set(kv.hbm_used)
+            if self.snapshotter is not None:
+                self.snapshotter.tick(eng.clock)
 
         span = eng.clock - clock_start
         if horizon_s is not None and horizon_s > span:
