@@ -1,0 +1,192 @@
+"""Mixed-precision KV-tier benchmark: capacity stretch vs divergence.
+
+M2Cache's accessibility argument says DRAM and SSD stand in for HBM —
+but the lower tiers only pay off if each demoted byte is cheap. This
+benchmark quantifies the mixed-precision tier map (HBM fp16 → DRAM
+int8 → SSD packed int4) on the real tiny model under KV budgets tight
+enough to force preemption, DRAM demotion and flash spill on every
+request, then prices the quality cost with the divergence probe:
+
+  baseline  — quantization off (default map): every tier holds fp16,
+              the byte-identical PR5 path;
+  fp16      — an *explicit* all-fp16 map: must decode byte-identical
+              tokens to the baseline (the ``--no-kv-quant`` contract);
+  mixed     — fp16/int8/int4 down the hierarchy: demotions shrink as
+              they descend, so modeled SSD capacity stretches >= 3x
+              (int4 + codec overhead vs fp16) and swap traffic drops.
+
+Quality is gated out-of-band: :func:`repro.eval.kv_divergence_probe`
+round-trips prefill KV through the int4 codec and teacher-forces the
+reference continuation; mean top-5 logit overlap across seeded probes
+must stay >= ``--min-topk-overlap`` (0.95).
+
+Emits ``BENCH_mixedprec.json`` next to this file (same pattern as
+``BENCH_restart.json``) so the stretch/divergence trade-off is tracked
+across PRs.
+
+  PYTHONPATH=src python benchmarks/serving_mixedprec.py [--requests 6]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core.engine import M2CacheEngine
+from repro.serving import ContinuousBatchScheduler, requests_from_trace
+from repro.serving.workload import ArrivalEvent
+
+
+def build_events(args, cfg):
+    rng = np.random.default_rng(args.seed)
+    return [ArrivalEvent(rid=i, arrival_s=0.0,
+                         prompt_len=int(rng.integers(10, 20)),
+                         max_new_tokens=int(rng.integers(6, 11)))
+            for i in range(args.requests)]
+
+
+def run_system(name, args, cfg, params, events, *, ssd_dir,
+               kv_precision=None):
+    """One serving pass under tight KV budgets with the given tier map."""
+    eng = M2CacheEngine(cfg=cfg, params=params,
+                        dram_capacity_gb=args.dram_gb,
+                        ssd_dir=ssd_dir, seed=args.seed)
+    sched = ContinuousBatchScheduler(
+        eng, max_batch=args.max_batch,
+        hbm_kv_gb=args.hbm_kv_gb, dram_kv_gb=args.dram_kv_gb,
+        kv_precision=kv_precision)
+    rep = sched.run(requests_from_trace(events,
+                                        vocab_size=cfg.vocab_size))
+    s = rep.summary()
+    row = {
+        "kv_precision": kv_precision or "off",
+        "tokens_per_s": s["tokens_per_s"],
+        "modeled_span_s": rep.modeled_span_s,
+        "p50_ttft_s": s["p50_ttft_s"],
+        "gco2_per_request": s["gco2_per_request"],
+        "preemptions": rep.preemptions,
+        "kv_swap_out_bytes": rep.kv_stats["kv_swap_out_bytes"],
+        "kv_ssd_write_bytes": rep.kv_stats["kv_ssd_write_bytes"],
+        "kv_transfer_saved_bytes": s.get("kv_transfer_saved_bytes", 0.0),
+        "kv_ssd_capacity_stretch": s.get("kv_ssd_capacity_stretch", 1.0),
+        "tokens": {r.rid: list(r.session.tokens) for r in rep.requests},
+    }
+    print(f"{name:9s} tok/s={row['tokens_per_s']:9.0f} "
+          f"preempt={row['preemptions']:2d} "
+          f"swap_out={row['kv_swap_out_bytes']:9.0f}B "
+          f"stretch={row['kv_ssd_capacity_stretch']:5.2f}x "
+          f"gCO2/req={row['gco2_per_request']:.2e}")
+    return row
+
+
+def run_probes(args, cfg, params):
+    """Seeded int4 divergence probes: the quality side of the trade."""
+    from repro.eval import kv_divergence_probe
+    probes = []
+    for seed in range(args.probe_seeds):
+        rng = np.random.default_rng(seed)
+        prompt = rng.integers(0, cfg.vocab_size,
+                              args.probe_prompt_len).tolist()
+        rep = kv_divergence_probe(cfg, params, prompt,
+                                  gen_len=args.probe_gen_len,
+                                  precision="int4", k=args.topk)
+        probes.append(rep.to_dict())
+        print(f"probe[{seed}] int4 top-{args.topk} overlap="
+              f"{rep.topk_overlap_mean:.3f} "
+              f"max|dlogit|={rep.max_abs_diff:.3f} "
+              f"first_div={rep.first_token_divergence}")
+    return probes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--dram-gb", type=float, default=0.5)
+    ap.add_argument("--hbm-kv-gb", type=float, default=0.8e-4,
+                    help="tight: forces preemption + demotion")
+    ap.add_argument("--dram-kv-gb", type=float, default=0.4e-5,
+                    help="tight: forces the DRAM->SSD spill even for "
+                         "quantized (int8, half-size) demotions")
+    ap.add_argument("--probe-seeds", type=int, default=4)
+    ap.add_argument("--probe-prompt-len", type=int, default=24)
+    ap.add_argument("--probe-gen-len", type=int, default=8)
+    ap.add_argument("--topk", type=int, default=5)
+    ap.add_argument("--min-stretch", type=float, default=3.0,
+                    help="required modeled SSD capacity stretch")
+    ap.add_argument("--min-topk-overlap", type=float, default=0.95,
+                    help="required mean top-k overlap of int4 probes")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_mixedprec.json "
+                         "next to this script)")
+    args = ap.parse_args()
+    if args.requests < 4:
+        ap.error("acceptance regime is >= 4 concurrent requests")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config(args.arch, tiny=True)
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg,
+                           dtype=jnp.float32, m2=True)
+    events = build_events(args, cfg)
+
+    work = tempfile.mkdtemp(prefix="m2cache_mixedprec_")
+    try:
+        rows = {
+            "baseline": run_system("baseline", args, cfg, params, events,
+                                   ssd_dir=f"{work}/ssd1"),
+            "fp16": run_system("fp16", args, cfg, params, events,
+                               ssd_dir=f"{work}/ssd2",
+                               kv_precision="fp16"),
+            "mixed": run_system("mixed", args, cfg, params, events,
+                                ssd_dir=f"{work}/ssd3",
+                                kv_precision="mixed"),
+        }
+        probes = run_probes(args, cfg, params)
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+    base, mixed = rows["baseline"], rows["mixed"]
+    overlap = float(np.mean([p["topk_overlap_mean"] for p in probes]))
+    checks = {
+        "demotion_forced": base["preemptions"] > 0
+        and mixed["preemptions"] > 0,
+        "tokens_identical_noquant":
+            rows["fp16"]["tokens"] == base["tokens"],
+        "capacity_stretch": mixed["kv_ssd_capacity_stretch"],
+        "capacity_stretch_ok":
+            mixed["kv_ssd_capacity_stretch"] >= args.min_stretch,
+        "transfer_saved_bytes": mixed["kv_transfer_saved_bytes"],
+        "mixed_fewer_swap_bytes":
+            mixed["kv_swap_out_bytes"] < base["kv_swap_out_bytes"],
+        "mixed_fewer_flash_bytes":
+            mixed["kv_ssd_write_bytes"] < base["kv_ssd_write_bytes"],
+        "topk_overlap_mean": overlap,
+        "topk_overlap_ok": overlap >= args.min_topk_overlap,
+        "mixed_no_slower": mixed["tokens_per_s"]
+        >= base["tokens_per_s"] * (1 - 1e-9),
+    }
+    for k, v in checks.items():
+        flag = "" if bool(v) else "  <-- EXPECTED TO HOLD"
+        print(f"  {k}: {v}{flag}")
+
+    for row in rows.values():
+        row.pop("tokens")                  # keep the JSON artifact small
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parent / "BENCH_mixedprec.json"
+    payload = {"config": vars(args), "systems": rows,
+               "probes": probes, "checks": checks}
+    out.write_text(json.dumps(payload, indent=1, default=float))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

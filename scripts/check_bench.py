@@ -60,6 +60,8 @@ SMOKE_RUNS = {
                            "--requests", "8"],
     "BENCH_obs.json": ["benchmarks/serving_obs.py",
                        "--requests", "8"],
+    "BENCH_mixedprec.json": ["benchmarks/serving_mixedprec.py",
+                             "--requests", "6"],
 }
 
 #: per-artifact regression metrics: (name, dotted path [or "a/b" ratio],
@@ -102,6 +104,14 @@ METRICS = {
         ("traced_tok_s", "systems.on.tokens_per_s", "higher"),
         ("traced_prefix_hit_rate", "systems.on.prefix_hit_rate",
          "higher"),
+    ],
+    "BENCH_mixedprec.json": [
+        ("ssd_capacity_stretch", "checks.capacity_stretch", "higher"),
+        ("topk_overlap_mean", "checks.topk_overlap_mean", "higher"),
+        ("transfer_saved_bytes", "checks.transfer_saved_bytes",
+         "higher"),
+        ("mixed_swap_out_bytes", "systems.mixed.kv_swap_out_bytes",
+         "lower"),
     ],
 }
 

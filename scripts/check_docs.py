@@ -53,7 +53,9 @@ def main():
     for topic in ("radix", "copy-on-write", "refcount",
                   "carbon-aware admission", "real KV residency",
                   "suffix-only prefill", "persistence across restarts",
-                  "prefill_resume"):
+                  "prefill_resume", "mixed-precision tiers",
+                  "divergence acceptance gate",
+                  "carbon-aware insert precision"):
         if topic.lower() not in serving_doc.lower():
             errors.append(
                 f"docs/SERVING.md does not document {topic!r} "
@@ -71,7 +73,7 @@ def main():
                 f"docs/OBSERVABILITY.md does not mention {mod.name}")
     for topic in ("modeled clock", "Perfetto", "kv-block-trace",
                   "trace_report.py", "event taxonomy",
-                  "carbon attribution", "overhead"):
+                  "carbon attribution", "overhead", "precision"):
         if topic.lower() not in obs_doc.lower():
             errors.append(
                 f"docs/OBSERVABILITY.md does not document {topic!r} "

@@ -379,20 +379,26 @@ class M2CacheEngine:
         else:
             self._zi_clock += dt
 
-    def kv_bytes_per_token(self) -> float:
+    def kv_bytes_per_token(self, precision: str = "fp16") -> float:
         """KV bytes one token pins across all layers. With real KV
         residency (tiny model, payload-capable arch) this is the *actual*
         byte count of the cache leaves a token occupies — the transfer
         clock then prices the bytes that really move between tiers;
-        analytic/paper-scale engines use the modeled FP16 K+V figure."""
+        analytic/paper-scale engines use the modeled FP16 K+V figure.
+        ``precision`` gives the modeled estimate at a quantized tier
+        width (int8 halves it, packed int4 quarters it) — capacity
+        planning only; stored blocks measure their real packed sizes."""
         if self.supports_kv_payloads:
             from repro.core.kv_payload import token_nbytes
             from repro.models import transformer as T
             import jax.numpy as jnp
             specs = T.cache_specs(self.cfg, 1, max_seq=32,
                                   dtype=jnp.float32)
-            return token_nbytes(specs)
-        return 2.0 * self.num_layers * self.d_model * 2.0
+            full = token_nbytes(specs)
+        else:
+            full = 2.0 * self.num_layers * self.d_model * 2.0
+        from repro.serving.kv_cache import PRECISION_FRACTION
+        return full * PRECISION_FRACTION[precision]
 
     def kv_provider(self, sess: DecodeSession):
         """Block-payload provider for the tiered KV cache's real-residency

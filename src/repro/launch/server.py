@@ -166,6 +166,18 @@ def main():
     ap.add_argument("--no-kv-prefetch", action="store_true",
                     help="disable predictive KV promotion; every resume "
                          "pays the serial swap-in")
+    ap.add_argument("--kv-precision", default=None, metavar="MAP",
+                    help="per-tier KV storage precision, e.g. "
+                         "'hbm:fp16,dram:int8,ssd:int4' (or the 'mixed' "
+                         "shorthand for exactly that map). Demoted "
+                         "blocks are stored quantized and transfer/"
+                         "capacity accounting prices the packed bytes; "
+                         "restored KV is no longer bit-exact (see "
+                         "docs/SERVING.md for the divergence contract). "
+                         "Default: fp16 everywhere")
+    ap.add_argument("--no-kv-quant", action="store_true",
+                    help="force fp16 on every KV tier (byte-identical "
+                         "paging), overriding --kv-precision")
     ap.add_argument("--prefix-cache", default=False,
                     action=argparse.BooleanOptionalAction,
                     help="--prefix-cache enables radix-tree KV prefix "
@@ -236,6 +248,8 @@ def main():
                                      prefill_chunk=args.prefill_chunk,
                                      carbon_trace=carbon_trace,
                                      kv_prefetch=not args.no_kv_prefetch,
+                                     kv_precision=None if args.no_kv_quant
+                                     else args.kv_precision,
                                      prefix_caching=args.prefix_cache,
                                      prefix_capacity_tokens=
                                      args.prefix_capacity,

@@ -9,16 +9,20 @@ without re-running the serving stack.
 Format spec (``docs/OBSERVABILITY.md`` carries the authoritative copy):
 
 * line 1 is a header record: ``{"format": "kv-block-trace",
-  "version": 1, ...}``
+  "version": 2, ...}``
 * every other line is an event::
 
       {"t": <modeled_s>, "op": <str>, "bid": <int>, "rid": <int>,
        "tier": <str>, "prev_tier": <str|null>, "nbytes": <int>,
-       "tok0": <int>, "cause": <str|null>}
+       "tok0": <int>, "cause": <str|null>, "precision": <str|null>}
 
   ``op`` ∈ {alloc, touch, promote, demote, spill, evict, pin, unpin,
   free, adopt}; ``tier`` is the block's tier *after* the op; ``cause``
-  says why (e.g. "hbm_pressure", "prefetch", "preempt").
+  says why (e.g. "hbm_pressure", "prefetch", "preempt"); ``precision``
+  (v2, fp16 | int8 | int4, null on v1 files) labels the storage
+  precision of the bytes that moved — for promotes, the precision the
+  block was *stored at* on its source tier (``nbytes`` is sized
+  accordingly).
 
 ``read_block_trace`` parses a file back into events;
 ``BlockAccessEvent.to_record``/``from_record`` round-trip exactly,
@@ -31,7 +35,7 @@ import json
 from typing import Dict, Iterator, List, Optional
 
 FORMAT_NAME = "kv-block-trace"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2        # v2: + per-event storage precision label
 
 OPS = ("alloc", "touch", "promote", "demote", "spill", "evict",
        "pin", "unpin", "free", "adopt")
@@ -48,12 +52,15 @@ class BlockAccessEvent:
     nbytes: int = 0
     tok0: int = 0                 # first token index covered by the block
     cause: Optional[str] = None
+    precision: Optional[str] = None   # storage precision of the moved
+                                      # bytes (v2; None on v1 files)
 
     def to_record(self) -> Dict:
         return {"t": self.t, "op": self.op, "bid": self.bid,
                 "rid": self.rid, "tier": self.tier,
                 "prev_tier": self.prev_tier, "nbytes": self.nbytes,
-                "tok0": self.tok0, "cause": self.cause}
+                "tok0": self.tok0, "cause": self.cause,
+                "precision": self.precision}
 
     @classmethod
     def from_record(cls, rec: Dict) -> "BlockAccessEvent":
@@ -63,7 +70,8 @@ class BlockAccessEvent:
                    prev_tier=rec.get("prev_tier"),
                    nbytes=int(rec.get("nbytes", 0)),
                    tok0=int(rec.get("tok0", 0)),
-                   cause=rec.get("cause"))
+                   cause=rec.get("cause"),
+                   precision=rec.get("precision"))
 
 
 class BlockTraceCollector:

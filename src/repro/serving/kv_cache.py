@@ -25,7 +25,20 @@ and cold blocks spill to flash. This module implements exactly that:
   (PCIe for HBM⇄DRAM, NVMe for DRAM⇄SSD) for the *actual bytes moved*
   that the scheduler charges to the engine clock, so KV paging shows up
   in ``modeled_s`` and therefore in token rates, latency percentiles
-  and carbon.
+  and carbon;
+* **mixed-precision tiers** (``precision_map``, default all-fp16):
+  precision decays as blocks age down the hierarchy — demotion
+  quantizes the captured payload for the destination tier with the
+  ``core/quantize.py`` KV codec (HBM fp16 → DRAM int8 → SSD packed
+  int4, per-group scales stored alongside in the same flat payload
+  dict), the DRAM→SSD spill re-quantizes int8 down to int4, and
+  promotion dequantizes before the device_put. The transfer clock, the
+  swap/pin byte counters and the DRAM/SSD capacity checks all price the
+  *quantized* byte counts, so the savings are real modeled savings;
+  precision never re-widens while stored (an int4 block stays int4
+  until promoted). With quantization on, restored KV is no longer
+  bit-exact — ``eval/divergence.py`` + ``benchmarks/serving_mixedprec.py``
+  hold the drift under the acceptance gate.
 
 Units and clock semantics: every public mutator (``alloc`` / ``extend`` /
 ``append_token`` / ``ensure_resident`` / ``swap_out``) returns **modeled
@@ -63,28 +76,80 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
+from repro.core import quantize as Q
 from repro.core.cache.dram_cache import DRAMCache
 from repro.core.cache.preloader import (PCIE_CHANNEL, SSD_CHANNEL,
                                         PrefetchEngine)
 from repro.core.cache.ssd_tier import SSDTier
 from repro.core.hw import HOST, HostHW
 
+#: per-tier KV storage precision maps. HBM is always fp16 — the device
+#: pytree is native-width; quantization happens at the demote boundary.
+FP16_PRECISION = {"hbm": "fp16", "dram": "fp16", "ssd": "fp16"}
+MIXED_PRECISION = {"hbm": "fp16", "dram": "int8", "ssd": "int4"}
+
+#: modeled stored-bytes fraction per precision vs the tier-native
+#: payload — sizes surrogate (analytic-engine) payloads; real payloads
+#: measure their actual packed nbytes instead
+PRECISION_FRACTION = {"fp16": 1.0, "int8": 0.5, "int4": 0.25}
+
+
+def parse_precision_map(spec) -> Dict[str, str]:
+    """``"hbm:fp16,dram:int8,ssd:int4"`` (or ``"mixed"`` / ``"fp16"`` /
+    a dict / None) → a full validated tier→precision map."""
+    if spec is None:
+        return dict(FP16_PRECISION)
+    if isinstance(spec, str):
+        if spec == "mixed":
+            return dict(MIXED_PRECISION)
+        if spec == "fp16":
+            return dict(FP16_PRECISION)
+        parsed = {}
+        for part in spec.split(","):
+            tier, _, prec = part.strip().partition(":")
+            parsed[tier] = prec
+        spec = parsed
+    out = dict(FP16_PRECISION)
+    for tier, prec in spec.items():
+        if tier not in out:
+            raise ValueError(f"unknown KV tier {tier!r} "
+                             f"(expected one of {sorted(out)})")
+        if prec not in PRECISION_FRACTION:
+            raise ValueError(f"unknown KV precision {prec!r} "
+                             f"(expected one of {sorted(PRECISION_FRACTION)})")
+        out[tier] = prec
+    if out["hbm"] != "fp16":
+        raise ValueError("the HBM tier must stay fp16 — device KV is "
+                         "native-width; quantization happens on demote")
+    if PRECISION_FRACTION[out["ssd"]] > PRECISION_FRACTION[out["dram"]]:
+        raise ValueError("precision must decay down the hierarchy "
+                         f"(dram={out['dram']} → ssd={out['ssd']} widens)")
+    return out
+
 
 @dataclasses.dataclass
 class KVBlock:
     bid: int
     rid: int
-    nbytes: float                 # real (unscaled) bytes
+    nbytes: float                 # real (unscaled) bytes *as stored now*
+                                  # — quantized tiers shrink it; promotion
+                                  # restores full_nbytes
     tier: str                     # "hbm" | "dram" | "ssd"
     tok0: int = 0                 # absolute first token position covered
     data: Optional[dict] = None   # host payload (real-residency mode):
                                   # set while the block's canonical bytes
                                   # live host-side (DRAM tier, or an
                                   # HBM-tier prefix-node block whose
-                                  # master copy is this dict); None when
-                                  # they live in a session's device
-                                  # pytree or in SSD files
+                                  # master copy is this dict — possibly
+                                  # quantized); None when they live in a
+                                  # session's device pytree or SSD files
     real: bool = False            # a real payload was ever captured
+    precision: str = "fp16"       # storage precision of the current bytes
+    full_nbytes: float = 0.0      # HBM-resident (fp16-tier) size
+
+    def __post_init__(self):
+        if not self.full_nbytes:
+            self.full_nbytes = self.nbytes
 
 
 class TieredKVCache:
@@ -94,8 +159,18 @@ class TieredKVCache:
                  bytes_per_token: float = None,
                  max_file_bytes: int = 65536,
                  prefetch: Optional[PrefetchEngine] = None,
-                 store_payloads: bool = False):
+                 store_payloads: bool = False,
+                 precision_map: Optional[Dict[str, str]] = None,
+                 prefetch_headroom_frac: float = 0.05):
         self.hw = hw
+        # per-tier storage precision (fp16 everywhere by default —
+        # byte-identical paging); any quantized tier flips self.quantized
+        self.precision = parse_precision_map(precision_map)
+        self.quantized = any(p != "fp16" for p in self.precision.values())
+        # prefetch never evicts, but it must not fill HBM to the brim
+        # either: admissions stop above (1 - headroom) of the budget so
+        # running requests can still append tokens without evictions
+        self.prefetch_headroom_frac = float(prefetch_headroom_frac)
         # shared modeled DMA engine (None -> all swaps priced serially)
         self.prefetch = prefetch
         if prefetch is not None:
@@ -142,6 +217,11 @@ class TieredKVCache:
         self.swap_in_bytes = 0.0
         self.swap_s = 0.0
         self.preempt_swaps = 0
+        # mixed-precision accounting: transfer bytes the quantized tiers
+        # avoided (vs full-width payloads) and the fp16-equivalent bytes
+        # behind each SSD spill write (capacity-stretch numerator)
+        self.quant_saved_bytes = 0.0
+        self.ssd_write_full_bytes = 0.0
         # prefetch accounting (real bytes / modeled seconds)
         self.prefetch_issued_bytes = 0.0
         self.prefetch_overlap_bytes = 0.0
@@ -166,23 +246,50 @@ class TieredKVCache:
         self._obs_clock = clock
 
     def _emit(self, op: str, blk: KVBlock, *, prev_tier=None, cause=None,
-              chrome: bool = True):
+              chrome: bool = True, precision: Optional[str] = None):
+        """``precision`` labels the bytes that *moved* (a promote's
+        stored precision, already re-widened on ``blk``); default: the
+        block's current storage precision."""
         if self._obs_trace is None and self._obs_blocks is None:
             return
         t = self._obs_clock() if self._obs_clock is not None else 0.0
+        prec = precision or blk.precision
         if self._obs_blocks is not None:
             self._obs_blocks.emit(t, op, blk.bid, blk.rid, blk.tier,
                                   prev_tier=prev_tier,
                                   nbytes=int(blk.nbytes), tok0=blk.tok0,
-                                  cause=cause)
+                                  cause=cause, precision=prec)
         if self._obs_trace is not None and chrome:
             self._obs_trace.instant("kv", op, t, bid=blk.bid, rid=blk.rid,
                                     tier=blk.tier, prev=prev_tier,
-                                    cause=cause, nbytes=int(blk.nbytes))
+                                    cause=cause, nbytes=int(blk.nbytes),
+                                    precision=prec)
 
     # ------------------------------------------------------------------
-    def _payload(self) -> dict:
-        return {"kv": np.zeros(self._stored, np.int8)}
+    def _payload(self, precision: str = "fp16") -> dict:
+        n = max(int(self._stored * PRECISION_FRACTION[precision]), 1)
+        return {"kv": np.zeros(n, np.int8)}
+
+    def _quantize_for(self, blk: KVBlock, payload: Optional[dict],
+                      tier: str):
+        """Re-encode a block's payload for a destination tier. Returns
+        ``(payload, precision, stored_nbytes)`` — the bytes the transfer
+        clock and the tier's capacity accounting should price. Precision
+        only decays (see ``kv_requantize_payload``); with quantization
+        off everything passes through at the block's current size."""
+        target = self.precision[tier]
+        if not self.quantized:
+            return payload, blk.precision, blk.nbytes
+        if payload is None:
+            prec = target
+            if PRECISION_FRACTION[prec] > PRECISION_FRACTION[blk.precision]:
+                prec = blk.precision          # surrogates never re-widen
+            return None, prec, blk.full_nbytes * PRECISION_FRACTION[prec]
+        q = Q.kv_requantize_payload(payload, target)
+        prec = Q.kv_payload_precision(q)
+        if q is payload and prec == blk.precision:
+            return payload, prec, blk.nbytes
+        return q, prec, float(Q.kv_payload_nbytes(q))
 
     def _charge(self, dt: float) -> float:
         self.swap_s += dt
@@ -223,46 +330,65 @@ class TieredKVCache:
 
     def _deliver(self, blk: KVBlock, payload: Optional[dict]):
         """Hand a promoted block's bytes back: device_put into the owning
-        session when a provider exists, else keep the host master copy
-        (prefix-node blocks, whose device copies live in the sessions
-        that restored them)."""
+        session when a provider exists (decoding a quantized payload back
+        to full width first — the device pytree is native-width), else
+        keep the host master copy (prefix-node blocks, whose device
+        copies live in the sessions that restored them). The host master
+        stays in its *stored* form: dequantizing here only to requantize
+        on the next demote would compound rounding error, so
+        :meth:`block_payload` decodes on demand instead."""
         if payload is None:
             blk.data = None
             return
         provider = self._providers.get(blk.rid)
         if provider is not None:
-            provider.import_(blk.tok0, payload)
+            provider.import_(blk.tok0, Q.kv_dequantize_payload(payload))
             blk.data = None
         else:
             blk.data = payload
 
-    def materialize(self, rid: int, start_block: int, nblocks: int):
+    def materialize(self, rid: int, start_block: int, nblocks: int, *,
+                    precision: Optional[str] = None):
         """Capture host copies of ``rid``'s blocks ``[start_block,
         start_block+nblocks)`` without scrubbing the device copy — the
         prefix cache calls this right before adopting a finished
         prefill's prompt blocks, so donated radix-node blocks carry the
-        actual KV bytes a later hit will restore."""
+        actual KV bytes a later hit will restore. ``precision`` (only
+        honoured when quantized tiers are on) encodes the captured host
+        master at insert time — the carbon-aware prefix policy stores
+        clean-window prefixes int8 and dirty-window ones int4 even while
+        the donor's device copy is still full-width in HBM."""
         if not self.store_payloads:
             return
         for bid in self.table[rid][start_block:start_block + nblocks]:
-            self._capture(self.blocks[bid], scrub=False)
+            blk = self.blocks[bid]
+            self._capture(blk, scrub=False)
+            if precision and self.quantized and blk.data is not None:
+                blk.data = Q.kv_requantize_payload(blk.data, precision)
 
-    def block_payload(self, bid: int) -> Optional[dict]:
+    def block_payload(self, bid: int, *, raw: bool = False) \
+            -> Optional[dict]:
         """A block's host payload wherever it currently lives (host
         master copy, DRAM store, or flash files — flash reads are copied
-        out so the caller owns the arrays). None for surrogate blocks."""
+        out so the caller owns the arrays). None for surrogate blocks.
+        Quantized payloads are decoded back to full precision unless
+        ``raw=True`` — persistence checksums the stored (packed) form,
+        everything else consumes tensors."""
         blk = self.blocks[bid]
         if not (self.store_payloads and blk.real):
             return None
+        payload = None
         if blk.data is not None:
-            return blk.data
-        if blk.tier == "dram" and bid in self.dram.dynamic:
-            payload = self.dram.dynamic[bid]
-            return payload if "kv" not in payload else None
-        if blk.tier == "ssd":
-            return {k: np.array(v)
-                    for k, v in self.ssd.read_layer(bid).items()}
-        return None
+            payload = blk.data
+        elif blk.tier == "dram" and bid in self.dram.dynamic:
+            p = self.dram.dynamic[bid]
+            payload = p if "kv" not in p else None
+        elif blk.tier == "ssd":
+            payload = {k: np.array(v)
+                       for k, v in self.ssd.read_layer(bid).items()}
+        if payload is None or raw:
+            return payload
+        return Q.kv_dequantize_payload(payload)
 
     def payloads_for(self, rid: int) -> List[Optional[dict]]:
         """Host payloads of ``rid``'s blocks in token order (the prefix
@@ -286,15 +412,26 @@ class TieredKVCache:
         for payload in payloads:
             bid = self._next_bid
             self._next_bid += 1
-            blk = KVBlock(bid=bid, rid=rid, nbytes=self.block_bytes,
+            if payload is not None:
+                prec = Q.kv_payload_precision(payload)
+                stored = self.block_bytes if prec == "fp16" \
+                    else float(Q.kv_payload_nbytes(payload))
+            elif self.quantized:
+                prec = self.precision["ssd"]
+                stored = self.block_bytes * PRECISION_FRACTION[prec]
+            else:
+                prec = "fp16"
+                stored = self.block_bytes
+            blk = KVBlock(bid=bid, rid=rid, nbytes=stored,
                           tier="ssd", tok0=self._next_tok0[rid],
-                          real=payload is not None)
+                          real=payload is not None, precision=prec,
+                          full_nbytes=self.block_bytes)
             self._next_tok0[rid] += self.block_tokens
             self.blocks[bid] = blk
             self.table.setdefault(rid, []).append(bid)
             self.ssd.write_layer(
-                bid, payload if payload is not None else self._payload(),
-                flush_meta=False)
+                bid, payload if payload is not None
+                else self._payload(prec), flush_meta=False)
             self._emit("adopt", blk, chrome=False, cause="persist_load")
         self.ssd.bytes_written = written0     # startup copy, not a spill
         self.tokens[rid] = len(payloads) * self.block_tokens
@@ -307,19 +444,33 @@ class TieredKVCache:
 
     # ------------------------------------------------------------------
     def _spill_dram_to_ssd(self, need_bytes: float) -> float:
-        """FIFO-spill DRAM blocks to flash until ``need_bytes`` fit."""
+        """FIFO-spill DRAM blocks to flash until ``need_bytes`` fit. Each
+        victim is re-encoded for the SSD tier's precision on the way out
+        (int8 → packed int4 under the mixed map), so the flash files —
+        and the NVMe leg of the transfer clock — carry the packed form."""
         dt = 0.0
         while self.dram.used_bytes + need_bytes > self.dram.capacity \
                 and self.dram.dynamic:
             bid = next(iter(self.dram.dynamic))
+            blk = self.blocks[bid]
             payload = self.dram.dynamic[bid]
+            if blk.real:
+                payload, prec, stored = self._quantize_for(blk, payload,
+                                                           "ssd")
+            else:
+                _, prec, stored = self._quantize_for(blk, None, "ssd")
+                if stored != blk.nbytes:
+                    payload = self._payload(prec)
             self.ssd.write_layer(bid, payload, flush_meta=False)
             self.dram.drop(bid)
-            blk = self.blocks[bid]
             blk.tier = "ssd"
             blk.data = None                    # canonical copy now on flash
-            self.swap_out_bytes += blk.nbytes
-            dt += blk.nbytes / self.hw.ssd_bw
+            blk.precision = prec
+            blk.nbytes = stored
+            self.ssd_write_full_bytes += blk.full_nbytes
+            self.quant_saved_bytes += blk.full_nbytes - stored
+            self.swap_out_bytes += stored
+            dt += stored / self.hw.ssd_bw
             self._emit("spill", blk, prev_tier="dram",
                        cause="dram_pressure")
         return dt
@@ -329,23 +480,31 @@ class TieredKVCache:
         """HBM → DRAM (spilling DRAM → SSD if the dynamic area is full).
         In real-residency mode the block's actual tensor bytes are pulled
         host-side (device_get) and the device copy scrubbed; otherwise a
-        surrogate payload stands in. Returns raw seconds; callers charge
-        at the public API boundary."""
+        surrogate payload stands in. With quantized tiers the captured
+        payload is encoded for the DRAM tier first, so the PCIe leg and
+        the DRAM capacity check both price the packed bytes. Returns raw
+        seconds; callers charge at the public API boundary."""
         blk = self.blocks[bid]
         assert blk.tier == "hbm"
-        dt = self._spill_dram_to_ssd(blk.nbytes)
         if self.prefetch is not None:
             # an unconsumed in-flight prefetch dies with the eviction
             self.prefetch.cancel(("kv", bid))
         self._hbm_lru.pop(bid, None)
         self.hbm_used -= blk.nbytes
         payload = self._capture(blk, scrub=True)
+        payload, prec, stored = self._quantize_for(blk, payload, "dram")
+        if payload is not None:
+            blk.data = payload        # quantized dict is the host master
+        dt = self._spill_dram_to_ssd(stored)
         self.dram.insert(bid, payload if payload is not None
-                         else self._payload())
+                         else self._payload(prec))
         blk.tier = "dram"
-        self.swap_out_bytes += blk.nbytes
+        blk.precision = prec
+        blk.nbytes = stored
+        self.quant_saved_bytes += blk.full_nbytes - stored
+        self.swap_out_bytes += stored
         self._emit(op, blk, prev_tier="hbm", cause=cause)
-        return dt + blk.nbytes / self.hw.pcie_bw
+        return dt + stored / self.hw.pcie_bw
 
     def _evict_for(self, need_bytes: float, protect: Iterable[int]) -> float:
         """LRU-evict non-protected HBM blocks until ``need_bytes`` fit.
@@ -365,47 +524,60 @@ class TieredKVCache:
         """DRAM/SSD → HBM. In real-residency mode the block's actual
         bytes come back with it: a DRAM block's host arrays (or an SSD
         block's file contents, copied out before the flash copy is
-        deleted) are device_put into the owning session, restoring the
-        scrubbed device state bit-for-bit."""
+        deleted) are device_put into the owning session — bit-for-bit
+        with fp16 tiers, dequantized from the stored precision under a
+        mixed map. The transfer legs price the *stored* (packed) bytes;
+        the promoted block then occupies its full fp16 footprint in HBM,
+        so eviction makes room for ``full_nbytes`` up front."""
         blk = self.blocks[bid]
-        dt = self._evict_for(blk.nbytes, protect)
+        dt = self._evict_for(blk.full_nbytes, protect)
         payload = None
         prev = blk.tier
+        stored = blk.nbytes              # packed bytes actually moved
+        stored_prec = blk.precision
         if blk.tier == "dram":
             if blk.real:
                 payload = blk.data or self.dram.dynamic.get(bid)
             self.dram.drop(bid)
-            dt += blk.nbytes / self.hw.pcie_bw
+            dt += stored / self.hw.pcie_bw
         elif blk.tier == "ssd":
             banks = self.ssd.read_layer(bid)       # real flash read
             if blk.real:
                 payload = {k: np.array(v) for k, v in banks.items()}
             self.ssd.delete_layer(bid, flush_meta=False)
-            dt += blk.nbytes / self.hw.ssd_bw \
-                + blk.nbytes / self.hw.pcie_bw
+            dt += stored / self.hw.ssd_bw \
+                + stored / self.hw.pcie_bw
         blk.tier = "hbm"
+        blk.nbytes = blk.full_nbytes
+        blk.precision = self.precision["hbm"]
         self._hbm_lru[bid] = None
         self.hbm_used += blk.nbytes
-        self.swap_in_bytes += blk.nbytes
+        self.swap_in_bytes += stored
+        self.quant_saved_bytes += blk.full_nbytes - stored
         if blk.real:
             self._deliver(blk, payload)
-        self._emit("promote", blk, prev_tier=prev, cause="demand")
+        self._emit("promote", blk, prev_tier=prev, cause="demand",
+                   precision=stored_prec)
         return dt
 
-    def _promote_async(self, bid: int, now: float) -> bool:
+    def _promote_async(self, bid: int, now: float) -> float:
         """Opportunistic DRAM/SSD → HBM promotion on the modeled DMA
         channels: the block becomes HBM-resident immediately, its arrival
         time tracked under key ``("kv", bid)`` for
         :meth:`ensure_resident` to wait on. Prefetch never evicts — it
-        only fills free HBM headroom, so it cannot displace running
-        requests' KV or trigger preemptions; returns False when the block
-        does not fit right now."""
+        only fills free HBM up to the headroom watermark, so it cannot
+        displace running requests' KV, trigger preemptions, or starve
+        their token appends; returns the stored bytes issued on the
+        channels (0.0 when the block does not fit right now)."""
         blk = self.blocks[bid]
-        if self.hbm_used + blk.nbytes > self.hbm_capacity:
-            return False
+        if self.hbm_used + blk.full_nbytes > \
+                self.hbm_capacity * (1.0 - self.prefetch_headroom_frac):
+            return 0.0
         not_before = 0.0
         payload = None
         prev = blk.tier
+        stored = blk.nbytes              # packed bytes actually moved
+        stored_prec = blk.precision
         if blk.tier == "dram":
             if blk.real:
                 payload = blk.data or self.dram.dynamic.get(bid)
@@ -416,22 +588,26 @@ class TieredKVCache:
                 payload = {k: np.array(v) for k, v in banks.items()}
             self.ssd.delete_layer(bid, flush_meta=False)
             key = ("kv_ssd", bid)
-            not_before = self.prefetch.issue(SSD_CHANNEL, key, blk.nbytes,
+            not_before = self.prefetch.issue(SSD_CHANNEL, key, stored,
                                              now)
             self.prefetch.cancel(key)              # waiters watch the PCIe leg
-        self.prefetch.issue(PCIE_CHANNEL, ("kv", bid), blk.nbytes, now,
+        self.prefetch.issue(PCIE_CHANNEL, ("kv", bid), stored, now,
                             not_before=not_before)
         blk.tier = "hbm"
+        blk.nbytes = blk.full_nbytes
+        blk.precision = self.precision["hbm"]
         self._hbm_lru[bid] = None
         self.hbm_used += blk.nbytes
-        self.swap_in_bytes += blk.nbytes
+        self.swap_in_bytes += stored
+        self.quant_saved_bytes += blk.full_nbytes - stored
         if blk.real:
             # the host→device copy lands now; only its *arrival time* is
             # modeled asynchronously (ensure_resident charges the
             # residual stall of the in-flight transfer)
             self._deliver(blk, payload)
-        self._emit("promote", blk, prev_tier=prev, cause="prefetch")
-        return True
+        self._emit("promote", blk, prev_tier=prev, cause="prefetch",
+                   precision=stored_prec)
+        return stored
 
     def _new_block(self, rid: int, protect: Iterable[int]) -> float:
         dt = self._evict_for(self.block_bytes, protect)
@@ -495,18 +671,17 @@ class TieredKVCache:
         """Predictively promote a request's blocks toward HBM in the
         background, starting at modeled time ``now`` (the scheduler calls
         this for requests it expects in the *next* decode batch, so the
-        transfers overlap the current step's compute). Only free HBM
-        headroom is filled — prefetch never evicts. Returns the real
-        bytes issued; nothing is charged to the clock here."""
+        transfers overlap the current step's compute). Admissions stop at
+        the HBM headroom watermark — prefetch never evicts. Returns the
+        real (stored) bytes issued; nothing is charged to the clock
+        here."""
         if self.prefetch is None:
             return 0.0
         issued = 0.0
         for bid in self.table.get(rid, []):
-            blk = self.blocks[bid]
-            if blk.tier == "hbm":
+            if self.blocks[bid].tier == "hbm":
                 continue
-            if self._promote_async(bid, now):
-                issued += blk.nbytes
+            issued += self._promote_async(bid, now)
         self.prefetch_issued_bytes += issued
         return issued
 
@@ -638,4 +813,21 @@ class TieredKVCache:
             "kv_resume_sync_s": self.resume_sync_s,
             # clock seconds paid waiting on KV residency, prefetched or not
             "kv_stall_s": self.resume_sync_s + self.prefetch_stall_s,
+            # mixed-precision tiers: transfer bytes avoided vs full-width
+            # paging, the fp16-equivalent bytes behind SSD spill writes
+            # (capacity-stretch numerator vs kv_ssd_write_bytes), and the
+            # live stored-vs-full footprint of the flash tier
+            "kv_quant_enabled": 1.0 if self.quantized else 0.0,
+            "kv_transfer_saved_bytes": self.quant_saved_bytes,
+            "kv_ssd_write_full_bytes": self.ssd_write_full_bytes,
+            "kv_ssd_stored_bytes": sum(
+                b.nbytes for b in self.blocks.values()
+                if b.tier == "ssd"),
+            "kv_ssd_full_bytes": sum(
+                b.full_nbytes for b in self.blocks.values()
+                if b.tier == "ssd"),
+            "kv_blocks_int8": sum(1 for b in self.blocks.values()
+                                  if b.precision == "int8"),
+            "kv_blocks_int4": sum(1 for b in self.blocks.values()
+                                  if b.precision == "int4"),
         }

@@ -134,13 +134,24 @@ class PrefixCache:
                  capacity_tokens: int = 65536,
                  carbon_trace: Optional[CarbonIntensityTrace] = None,
                  carbon_threshold_g_kwh: float = 300.0,
-                 defer_horizon_s: float = 1800.0):
+                 defer_horizon_s: float = 1800.0,
+                 insert_precision: Optional[str] = None):
         self.kv = kv
         self.block_tokens = kv.block_tokens
         self.capacity_tokens = int(capacity_tokens)
         self.carbon_trace = carbon_trace
         self.carbon_threshold = carbon_threshold_g_kwh
         self.defer_horizon_s = defer_horizon_s
+        # storage precision for donated prefix KV (quantized KV tiers
+        # only): "int8" / "int4" fix it, "carbon" picks per insert from
+        # the grid — a clean window keeps int8 (cheap storage, low
+        # drift), a dirty one drops to int4 (max stretch per stored
+        # byte). None stores whatever precision the donor blocks carry.
+        if insert_precision not in (None, "int8", "int4", "carbon"):
+            raise ValueError(
+                f"insert_precision must be None, 'int8', 'int4' or "
+                f"'carbon', got {insert_precision!r}")
+        self.insert_precision = insert_precision
         self.root = RadixNode(rid=0, blocks=[])
         self._locked: Dict[int, List[RadixNode]] = {}   # rid -> path nodes
         self._next_node_rid = -2            # negative: never a request rid
@@ -153,6 +164,8 @@ class PrefixCache:
         self.lookup_tokens_total = 0
         self.inserted_tokens = 0
         self.insert_skips_carbon = 0
+        self.inserts_int8 = 0
+        self.inserts_int4 = 0
         self.reclaimed_tokens = 0
         self.splits = 0
         self.load_rejects = 0
@@ -280,6 +293,19 @@ class PrefixCache:
             now, self.carbon_threshold,
             horizon_s=self.defer_horizon_s) is None
 
+    def _pick_precision(self, now: float) -> Optional[str]:
+        """Storage precision for this insert. ``"carbon"`` mode reads
+        the grid: a clean window affords int8 (half the storage, low
+        drift), a dirty one drops to int4 — the prefix is stored at a
+        quarter width so the carbon spent keeping it resident is
+        minimal. Without a trace, int8 is the safe default."""
+        if self.insert_precision != "carbon":
+            return self.insert_precision
+        if self.carbon_trace is None:
+            return "int8"
+        clean = self.carbon_trace.intensity_at(now) <= self.carbon_threshold
+        return "int8" if clean else "int4"
+
     def _split(self, node: RadixNode, at_blocks: int) -> RadixNode:
         """Copy-on-write fork: split ``node``'s edge after ``at_blocks``
         blocks. ``node`` keeps the head; a new child takes the tail
@@ -348,8 +374,14 @@ class PrefixCache:
         # real KV residency: capture host copies of the donated blocks'
         # actual tensor bytes (device_get from the donor's cache) before
         # ownership moves — these are what a later hit restores, and what
-        # save() persists to flash
-        self.kv.materialize(rid, start_block, nblocks)
+        # save() persists to flash. With quantized tiers the host master
+        # is encoded at the (possibly carbon-chosen) insert precision.
+        prec = self._pick_precision(now)
+        self.kv.materialize(rid, start_block, nblocks, precision=prec)
+        if prec == "int8":
+            self.inserts_int8 += 1
+        elif prec == "int4":
+            self.inserts_int4 += 1
         self.kv.adopt_blocks(rid, node.rid, nblocks,
                              start_block=start_block)
         node.parent.children[node.blocks[0]] = node
@@ -362,7 +394,8 @@ class PrefixCache:
         node.lockers.add(rid)
         self._locked.setdefault(rid, []).append(node)
         self.kv.pin(node.rid)
-        self._obs("insert", rid=rid, node_rid=node.rid, tokens=ntok)
+        self._obs("insert", rid=rid, node_rid=node.rid, tokens=ntok,
+                  precision=prec)
         self._reclaim(now)
         return ntok
 
@@ -433,7 +466,11 @@ class PrefixCache:
             ids[id(node)] = nid = len(nodes) + 1
             payloads, checksums = [], []
             for bid in self.kv.table.get(node.rid, []):
-                payload = self.kv.block_payload(bid)
+                # persist the *stored* (possibly int8/int4-packed) form:
+                # the crc covers exactly the bytes on disk, and a reload
+                # adopts the packed payload without a decode/re-encode
+                # round-trip (which would compound quantization error)
+                payload = self.kv.block_payload(bid, raw=True)
                 if payload is None:
                     payloads.append(None)
                     checksums.append(None)
@@ -547,6 +584,8 @@ class PrefixCache:
             / max(self.lookup_tokens_total, 1),
             "prefix_inserted_tokens": self.inserted_tokens,
             "prefix_insert_skips_carbon": self.insert_skips_carbon,
+            "prefix_inserts_int8": self.inserts_int8,
+            "prefix_inserts_int4": self.inserts_int4,
             "prefix_reclaimed_tokens": self.reclaimed_tokens,
             "prefix_splits": self.splits,
             "prefix_load_rejects": self.load_rejects,

@@ -191,6 +191,16 @@ class ServingReport:
             out["prefix_hit_rate"] = self.prefix_stats["prefix_hit_rate"]
             out["prefix_hit_tokens"] = \
                 self.prefix_stats["prefix_hit_tokens"]
+        if self.kv_stats.get("kv_quant_enabled"):
+            # mixed-precision tiers: bytes the quantized transfers avoided
+            # and the SSD capacity stretch (fp16-equivalent bytes behind
+            # the spill writes / packed bytes actually written)
+            out["kv_transfer_saved_bytes"] = \
+                self.kv_stats["kv_transfer_saved_bytes"]
+            written = self.kv_stats["kv_ssd_write_bytes"]
+            out["kv_ssd_capacity_stretch"] = \
+                self.kv_stats["kv_ssd_write_full_bytes"] / written \
+                if written else 1.0
         out.update(self.slo_summary())
         out["mean_intensity_g_kwh"] = \
             self.carbon["mean_intensity_g_kwh"]
@@ -221,6 +231,15 @@ class ContinuousBatchScheduler:
     scheduler's :class:`TieredKVCache` — cached prefixes page over the
     same HBM→DRAM→SSD tiers as live request KV.
 
+    ``kv_precision`` (anything ``kv_cache.parse_precision_map`` accepts;
+    default None = fp16 everywhere, byte-identical paging) turns on
+    mixed-precision KV tiers: demoted blocks are stored quantized per
+    tier and all transfer/capacity accounting prices the packed bytes.
+    When quantized tiers are on, the prefix cache picks its insert
+    precision carbon-aware (clean grid window → int8, dirty → int4) and
+    the report grows ``kv_transfer_saved_bytes`` /
+    ``kv_ssd_capacity_stretch``.
+
     Observability (all optional, all free on the modeled clock —
     recording never advances it, so modeled tok/s and generated tokens
     are identical with or without it): ``trace`` (a
@@ -242,6 +261,7 @@ class ContinuousBatchScheduler:
                  carbon_trace: Optional[
                      carbon_mod.CarbonIntensityTrace] = None,
                  kv_prefetch: bool = True,
+                 kv_precision=None,
                  prefix_cache: Optional[PrefixCache] = None,
                  prefix_caching: bool = False,
                  prefix_capacity_tokens: int = 65536,
@@ -265,7 +285,8 @@ class ContinuousBatchScheduler:
                 block_tokens=getattr(engine, "kv_block_tokens", 16),
                 prefetch=engine.prefetch if kv_prefetch else None,
                 store_payloads=getattr(engine, "supports_kv_payloads",
-                                       False))
+                                       False),
+                precision_map=kv_precision)
         self.kv = kv
         # real KV restore across requests needs the cache and the engine
         # to agree on block granularity (block-chunked prefill boundaries
@@ -282,7 +303,8 @@ class ContinuousBatchScheduler:
         if prefix_cache is None and prefix_caching:
             prefix_cache = PrefixCache(
                 kv, capacity_tokens=prefix_capacity_tokens,
-                carbon_trace=carbon_trace if prefix_carbon_aware else None)
+                carbon_trace=carbon_trace if prefix_carbon_aware else None,
+                insert_precision="carbon" if kv.quantized else None)
         self.prefix = prefix_cache
         self._t0 = 0.0                   # run()'s clock origin
         # -- observability wiring (purely passive: no clock advances) --

@@ -38,6 +38,8 @@ SUMMARY_OPTIONAL = frozenset({
     # requests carried SLOs (ServingReport.slo_summary)
     "slo_requests", "slo_attainment", "ttft_attainment",
     "tpot_attainment", "deadline_attainment",
+    # mixed-precision KV tiers on (kv_precision with a quantized tier)
+    "kv_transfer_saved_bytes", "kv_ssd_capacity_stretch",
 })
 
 #: key families whose suffix is data-dependent (one per SLO class)

@@ -57,15 +57,34 @@ class _ArrayProvider:
         self.imported[tok0] = payload
 
 
+class _TolerantProvider(_ArrayProvider):
+    """Accepts imports within the quantizer's error bound instead of
+    bit-exact; records the worst element error actually observed so the
+    test can prove the lossy path ran."""
+
+    def __init__(self, bt: int, atol: float):
+        super().__init__(bt)
+        self.atol = atol
+        self.max_err = 0.0
+
+    def import_(self, tok0, payload):
+        for key, ref in (("k", self._arr(tok0)),
+                         ("v", self._arr(tok0) * -1.0)):
+            err = float(np.abs(np.asarray(payload[key]) - ref).max())
+            self.max_err = max(self.max_err, err)
+            assert err <= self.atol, (tok0, key, err, self.atol)
+        self.imported[tok0] = payload
+
+
 def _kv(tmp_path, *, hbm_blocks, dram_blocks, block_tokens=4,
-        bytes_per_token=256.0):
+        bytes_per_token=256.0, **kw):
     bb = block_tokens * bytes_per_token
     return TieredKVCache(
         num_layers=2, d_model=8,
         hbm_capacity_bytes=hbm_blocks * bb,
         dram_capacity_bytes=dram_blocks * bb,
         ssd_dir=str(tmp_path / "kv"), block_tokens=block_tokens,
-        bytes_per_token=bytes_per_token, store_payloads=True)
+        bytes_per_token=bytes_per_token, store_payloads=True, **kw)
 
 
 def test_kv_block_payload_roundtrip_through_dram_and_ssd(tmp_path):
@@ -129,6 +148,113 @@ def test_kv_adopt_external_lands_flash_resident(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# mixed-precision tiers: quantized round-trips + prefetch headroom
+
+
+def test_kv_quantized_roundtrip_within_error_bound(tmp_path):
+    """Mixed map: demotion stores int8 in DRAM (re-encoded to packed
+    int4 by the flash spill) and promotion delivers dequantized bytes
+    within the codec's error bound, while all byte accounting prices
+    the packed sizes. fp16 tiers (all other tests here) stay the
+    bit-exact path."""
+    kv = _kv(tmp_path, hbm_blocks=4, dram_blocks=0.25,
+             precision_map="mixed")
+    prov = _TolerantProvider(kv.block_tokens, atol=0.5)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 8, protect=[0])              # 2 blocks
+    kv.swap_out(0)                           # capture+scrub, quantize
+    states = sorted((kv.blocks[b].tier, kv.blocks[b].precision)
+                    for b in kv.table[0])
+    assert states == [("dram", "int8"), ("ssd", "int4")]
+    assert all(kv.blocks[b].nbytes < kv.blocks[b].full_nbytes
+               for b in kv.table[0])
+    assert kv.quant_saved_bytes > 0
+    stats = kv.stats()
+    assert stats["kv_ssd_write_full_bytes"] > stats["kv_ssd_write_bytes"]
+    dt = kv.ensure_resident(0, protect=[0])
+    assert dt > 0.0
+    assert sorted(prov.imported) == [0, 4]   # within-bound (asserted
+    assert prov.max_err > 0.0                # inside) yet genuinely lossy
+    # promoted blocks re-occupy their full fp16 footprint in HBM
+    assert all(kv.blocks[b].nbytes == kv.blocks[b].full_nbytes
+               and kv.blocks[b].precision == "fp16"
+               for b in kv.table[0])
+
+
+def test_kv_quantized_surrogate_accounting(tmp_path):
+    """Provider-less (analytic-engine) rids page surrogates sized by the
+    precision fraction: the modeled savings apply without real tensors."""
+    kv = _kv(tmp_path, hbm_blocks=2, dram_blocks=0.25,
+             precision_map="mixed")
+    kv.alloc(0, 8)
+    kv.swap_out(0)
+    by_tier = {kv.blocks[b].tier: kv.blocks[b] for b in kv.table[0]}
+    assert by_tier["dram"].precision == "int8"
+    assert by_tier["dram"].nbytes == kv.block_bytes * 0.5
+    assert by_tier["ssd"].precision == "int4"
+    assert by_tier["ssd"].nbytes == kv.block_bytes * 0.25
+    # promotion restores the full modeled footprint
+    kv.ensure_resident(0)
+    assert all(kv.blocks[b].nbytes == kv.block_bytes
+               for b in kv.table[0])
+
+
+def test_kv_fp16_map_explicit_is_bit_exact(tmp_path):
+    """An explicit all-fp16 precision map is the identity: payloads
+    round-trip bit-exact (the strict _ArrayProvider asserts equality)
+    and no quantized-savings counters move."""
+    kv = _kv(tmp_path, hbm_blocks=4, dram_blocks=1, precision_map="fp16")
+    assert not kv.quantized
+    prov = _ArrayProvider(kv.block_tokens)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 8, protect=[0])
+    kv.swap_out(0)
+    kv.ensure_resident(0, protect=[0])
+    assert sorted(prov.imported) == [0, 4]   # bit-exact, asserted inside
+    assert kv.quant_saved_bytes == 0.0
+
+
+def test_kv_precision_map_validation():
+    from repro.serving.kv_cache import parse_precision_map
+    assert parse_precision_map(None) == {"hbm": "fp16", "dram": "fp16",
+                                         "ssd": "fp16"}
+    assert parse_precision_map("mixed") == {"hbm": "fp16", "dram": "int8",
+                                            "ssd": "int4"}
+    assert parse_precision_map("hbm:fp16,dram:int8,ssd:int4") == \
+        parse_precision_map("mixed")
+    with pytest.raises(ValueError):
+        parse_precision_map("hbm:int8")          # device KV stays fp16
+    with pytest.raises(ValueError):
+        parse_precision_map("dram:int4,ssd:int8")   # re-widens downward
+    with pytest.raises(ValueError):
+        parse_precision_map("dram:int3")
+    with pytest.raises(ValueError):
+        parse_precision_map({"gpu": "fp16"})
+
+
+def test_prefetch_headroom_caps_admissions(tmp_path):
+    """Regression: opportunistic prefetch used to fill HBM to 100% of
+    the budget, leaving running requests no room to append tokens
+    without forced evictions. Admissions must stop at the headroom
+    watermark, and the reserved room must serve a fresh alloc free."""
+    from repro.core.cache.preloader import PrefetchEngine
+    pf = PrefetchEngine()
+    kv = _kv(tmp_path, hbm_blocks=4, dram_blocks=8, prefetch=pf,
+             prefetch_headroom_frac=0.25)
+    kv.alloc(0, 16)                          # 4 blocks fill HBM
+    kv.swap_out(0)
+    issued = kv.prefetch_resident(0, now=0.0)
+    hbm = [b for b in kv.table[0] if kv.blocks[b].tier == "hbm"]
+    assert len(hbm) == 3                     # 4th crosses the watermark
+    assert kv.hbm_used <= kv.hbm_capacity * 0.75
+    assert issued == sum(kv.blocks[b].full_nbytes for b in hbm)
+    # the reserved headroom absorbs new allocation without any eviction
+    dt = kv.alloc(1, 4)
+    assert dt == 0.0
+    assert kv.hbm_used <= kv.hbm_capacity
+
+
+# ---------------------------------------------------------------------------
 # real-tiny: byte-identical tokens across residency paths
 
 
@@ -144,7 +270,8 @@ def tiny_model():
     return cfg, params
 
 
-def _serve(tmp_path, tag, cfg, params, *, hbm_kv_gb, dram_kv_gb):
+def _serve(tmp_path, tag, cfg, params, *, hbm_kv_gb, dram_kv_gb,
+           kv_precision=None):
     eng = M2CacheEngine(cfg=cfg, params=params, dram_capacity_gb=0.5,
                         ssd_dir=str(tmp_path / tag))
     events = [ArrivalEvent(rid=i, arrival_s=0.0, prompt_len=pl,
@@ -154,7 +281,8 @@ def _serve(tmp_path, tag, cfg, params, *, hbm_kv_gb, dram_kv_gb):
     reqs = requests_from_trace(events, vocab_size=cfg.vocab_size)
     sched = ContinuousBatchScheduler(eng, max_batch=4,
                                      hbm_kv_gb=hbm_kv_gb,
-                                     dram_kv_gb=dram_kv_gb)
+                                     dram_kv_gb=dram_kv_gb,
+                                     kv_precision=kv_precision)
     rep = sched.run(reqs)
     return rep, {r.rid: list(r.session.tokens) for r in rep.requests}
 
@@ -278,3 +406,65 @@ def _walk(root):
         if n is not root:
             out.append(n)
     return out
+
+
+# ---------------------------------------------------------------------------
+# real-tiny: mixed-precision serving + divergence acceptance gate
+
+
+@pytest.mark.slow
+def test_no_kv_quant_byte_identical_and_mixed_saves_bytes(tmp_path,
+                                                          tiny_model):
+    """The --no-kv-quant contract: quantization off (the default map, or
+    an explicit all-fp16 map) serves tokens byte-identical to the PR5
+    fp16 path. Turning the mixed map on under the same tight budgets
+    cuts transferred bytes and stretches modeled SSD capacity >= 3x."""
+    cfg, params = tiny_model
+    tight = dict(hbm_kv_gb=0.8e-4, dram_kv_gb=1.6e-5)
+    rep_def, toks_def = _serve(tmp_path, "def", cfg, params, **tight)
+    rep_fp16, toks_fp16 = _serve(tmp_path, "fp16", cfg, params,
+                                 kv_precision="fp16", **tight)
+    rep_mix, toks_mix = _serve(tmp_path, "mix", cfg, params,
+                               kv_precision="mixed", **tight)
+    assert toks_fp16 == toks_def             # explicit fp16 == default
+    assert "kv_ssd_capacity_stretch" not in rep_fp16.summary()
+    # the mixed run really demoted + spilled through the lossy codec
+    assert rep_mix.preemptions > 0
+    assert rep_mix.kv_stats["kv_quant_enabled"] == 1.0
+    assert rep_mix.kv_stats["kv_transfer_saved_bytes"] > 0
+    assert rep_mix.kv_stats["kv_ssd_write_bytes"] < \
+        rep_def.kv_stats["kv_ssd_write_bytes"]
+    assert rep_mix.kv_stats["kv_swap_out_bytes"] < \
+        rep_def.kv_stats["kv_swap_out_bytes"]
+    summary = rep_mix.summary()
+    assert summary["kv_ssd_capacity_stretch"] >= 3.0
+    # every request still terminates with the right shape of output
+    assert sorted(toks_mix) == sorted(toks_def)
+    assert all(len(toks_mix[r]) == len(toks_def[r]) for r in toks_def)
+
+
+@pytest.mark.slow
+def test_kv_divergence_under_acceptance_gate_real(tiny_model):
+    """Divergence acceptance gate (the quality contract quoted in
+    docs/LIMITATIONS.md): int4-roundtripped prefix KV keeps mean top-5
+    logit overlap >= 0.95 over seeded real-tiny probes, and int8 is at
+    least as close as int4 (precision decays monotonically)."""
+    from repro.eval import kv_divergence_probe
+    cfg, params = tiny_model
+    seeds, k, results = range(4), 5, {}
+    for prec in ("int8", "int4"):
+        probes = []
+        for seed in seeds:
+            rng = np.random.default_rng(seed)
+            prompt = rng.integers(0, cfg.vocab_size, 24).tolist()
+            probes.append(kv_divergence_probe(cfg, params, prompt,
+                                              gen_len=8, precision=prec,
+                                              k=k))
+        results[prec] = probes
+    mean_overlap = {p: float(np.mean([r.topk_overlap_mean for r in rs]))
+                    for p, rs in results.items()}
+    assert mean_overlap["int4"] >= 0.95      # the acceptance gate
+    assert mean_overlap["int8"] >= mean_overlap["int4"]
+    for probes in results.values():
+        assert all(np.isfinite(r.max_abs_diff) for r in probes)
+        assert all(r.max_abs_diff > 0 for r in probes)   # truly lossy

@@ -51,7 +51,9 @@ def test_kv_free_with_prefetch_in_flight(tmp_path):
     """free() while an async promotion is mid-flight must cancel the
     transfer and leave no stale in-flight record or block state."""
     pf = PrefetchEngine()
-    kv = _kv(tmp_path, hbm_blocks=2, dram_blocks=4, prefetch=pf)
+    # 3-block HBM: both parked blocks fit under the prefetch headroom
+    # watermark (admission stops at 95% of the budget)
+    kv = _kv(tmp_path, hbm_blocks=3, dram_blocks=4, prefetch=pf)
     kv.alloc(0, 8)
     kv.swap_out(0)                       # both blocks parked in DRAM
     kv.prefetch_resident(0, now=0.0)     # async DRAM->HBM promotions

@@ -1,0 +1,167 @@
+"""Property tests for the KV payload quantization codec
+(``core/quantize.py``): the storage format behind mixed-precision KV
+tiers (``serving/kv_cache.py``).
+
+Acceptance properties (hypothesis when installed, deterministic random
+sample otherwise — see ``tests/_hypothesis_compat.py``):
+
+* int8 / int4 quant→dequant error is bounded by half the stored scale
+  per element (the symmetric-rounding guarantee the divergence gate in
+  ``eval/divergence.py`` builds on);
+* ``unpack_int4(pack_int4(x))`` is bit-exact for odd *and* even lengths
+  on any axis (odd lengths exercise the zero-pad + trim path);
+* stored scales are finite and strictly positive for arbitrary finite
+  inputs, including all-zero rows (the 1e-8 floor);
+* a quantize→dequantize round-trip preserves every key, shape and dtype
+  of the payload, across array ranks and dtypes;
+* precision only decays through ``kv_requantize_payload`` (int4 asked
+  for int8 stays int4; fp16 targets are the identity).
+"""
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core import quantize as Q
+
+_SHAPES = [(3,), (5,), (2, 7), (4, 8), (2, 1, 4, 2, 32), (1, 13),
+           (6, 1), (2, 3, 9)]
+
+
+def _payload(seed: int, shape, dtype=np.float32, scale_pow: int = 0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(shape) * (10.0 ** scale_pow)
+    return {"['x'][0]['k']": a.astype(dtype),
+            "['x'][0]['v']": (a * -0.5).astype(dtype)}
+
+
+# ---------------------------------------------------------------------------
+# error bounds
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       shape=st.sampled_from(_SHAPES),
+       scale_pow=st.integers(-3, 3))
+def test_int8_roundtrip_error_within_half_scale(seed, shape, scale_pow):
+    pay = _payload(seed, shape, scale_pow=scale_pow)
+    q = Q.kv_quantize_payload(pay, "int8")
+    deq = Q.kv_dequantize_payload(q)
+    for key, orig in pay.items():
+        scale = np.asarray(q[key + "::scale"], np.float32)
+        rows = orig.reshape(-1, orig.shape[-1])
+        err = np.abs(np.asarray(deq[key]).reshape(rows.shape) - rows)
+        # symmetric rounding: |x - round(x/s)*s| <= s/2 per element
+        assert np.all(err <= scale[:, None] / 2 + 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       shape=st.sampled_from(_SHAPES),
+       scale_pow=st.integers(-3, 3))
+def test_int4_roundtrip_error_within_half_scale(seed, shape, scale_pow):
+    pay = _payload(seed, shape, scale_pow=scale_pow)
+    q = Q.kv_quantize_payload(pay, "int4")
+    deq = Q.kv_dequantize_payload(q)
+    G = Q.KV_INT4_GROUP
+    for key, orig in pay.items():
+        # per-group fp16 scales: the bound is each element's own group
+        # scale (computed in fp32 during quantization — allow the fp16
+        # storage rounding as relative slack)
+        scale = np.asarray(q[key + "::scale"]).astype(np.float32)
+        rows, ng = scale.shape
+        flat = orig.reshape(rows, -1)
+        padded = np.zeros((rows, ng * G), np.float32)
+        padded[:, :flat.shape[1]] = flat
+        err = np.abs(np.asarray(deq[key], np.float32).reshape(rows, -1)
+                     - flat)
+        bound = np.repeat(scale, G, axis=1)[:, :flat.shape[1]]
+        assert np.all(err <= bound * 0.505 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bit-exact nibble packing
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       rows=st.integers(1, 5), length=st.integers(1, 17),
+       axis=st.sampled_from([0, 1, -1]))
+def test_pack_unpack_int4_bit_exact(seed, rows, length, axis):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-7, 8, size=(rows, length)).astype(np.int8)
+    packed = Q.pack_int4(q, axis=axis)
+    orig_len = q.shape[axis]
+    out = np.asarray(Q.unpack_int4(packed, axis, orig_len=orig_len))
+    np.testing.assert_array_equal(out, q)
+
+
+def test_pack_int4_odd_and_even_last_dim_sizes():
+    for length in (4, 7):                      # even + odd
+        q = np.arange(-2, length - 2, dtype=np.int8).reshape(1, length)
+        packed = Q.pack_int4(q, axis=1)
+        assert packed.shape == (1, (length + 1) // 2)
+        out = np.asarray(Q.unpack_int4(packed, 1, orig_len=length))
+        np.testing.assert_array_equal(out, q)
+
+
+# ---------------------------------------------------------------------------
+# scale sanity
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), shape=st.sampled_from(_SHAPES),
+       precision=st.sampled_from(["int8", "int4"]),
+       zero=st.booleans())
+def test_scales_finite_and_positive(seed, shape, precision, zero):
+    pay = _payload(seed, shape)
+    if zero:           # all-zero payloads hit the 1e-8 scale floor
+        pay = {k: np.zeros_like(v) for k, v in pay.items()}
+    q = Q.kv_quantize_payload(pay, precision)
+    for key in pay:
+        scale = np.asarray(q[key + "::scale"], np.float32)
+        assert np.all(np.isfinite(scale))
+        assert np.all(scale > 0)
+
+
+# ---------------------------------------------------------------------------
+# structure preservation + precision decay
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), shape=st.sampled_from(_SHAPES),
+       dtype=st.sampled_from([np.float32, np.float16]),
+       precision=st.sampled_from(["int8", "int4"]))
+def test_roundtrip_preserves_keys_shapes_dtypes(seed, shape, dtype,
+                                                precision):
+    pay = _payload(seed, shape, dtype=dtype)
+    q = Q.kv_quantize_payload(pay, precision)
+    assert Q.kv_payload_precision(q) == precision
+    if shape[-1] >= 16 and dtype is np.float32:
+        # compression holds once rows are long enough to amortize the
+        # per-row scale/meta overhead (real KV leaves have 32-wide rows)
+        assert Q.kv_payload_nbytes(q) < Q.kv_payload_nbytes(pay)
+    deq = Q.kv_dequantize_payload(q)
+    assert sorted(deq) == sorted(pay)
+    for key, orig in pay.items():
+        assert deq[key].shape == orig.shape
+        assert deq[key].dtype == orig.dtype
+
+
+def test_requantize_only_decays():
+    pay = _payload(0, (4, 32))
+    assert Q.kv_requantize_payload(pay, "fp16") is pay
+    q8 = Q.kv_requantize_payload(pay, "int8")
+    assert Q.kv_payload_precision(q8) == "int8"
+    assert Q.kv_requantize_payload(q8, "int8") is q8
+    q4 = Q.kv_requantize_payload(q8, "int4")
+    assert Q.kv_payload_precision(q4) == "int4"
+    # re-widening is refused: int4 stays int4 when asked for int8
+    assert Q.kv_requantize_payload(q4, "int8") is q4
+    assert Q.kv_requantize_payload(q4, "fp16") is q4
+
+
+def test_unquantized_payload_passthrough():
+    pay = _payload(1, (2, 8))
+    assert Q.kv_payload_precision(pay) == "fp16"
+    assert Q.kv_dequantize_payload(pay) is pay
+    assert Q.kv_dequantize_payload(None) is None
+    assert Q.kv_payload_precision(None) == "fp16"
