@@ -1,0 +1,202 @@
+"""Chaos benchmark: graceful degradation under injected faults.
+
+Serves the same real-tiny burst four times through the continuous-
+batching scheduler under KV budgets tight enough to force preemption
+and DRAM→SSD spills, then holds the reliability subsystem
+(``repro/serving/faults.py`` + docs/RELIABILITY.md) to its contract:
+
+* **base** — fault-free reference streams;
+* **chaos** — the committed ``fault_plans/chaos.json``: a burst of SSD
+  read errors (enough to exhaust the bounded retry on one block, lose
+  it, and trip the circuit breaker into DRAM-only quarantine), one
+  silent flash bit-flip (caught by the payload checksum, retried
+  clean), and transient provider capture faults. The lost block's
+  victim is re-enqueued and re-prefilled — **every final stream must
+  stay byte-identical to the fault-free run** and nobody may fail;
+* **hard** — ``fault_plans/hard.json``: relentless SSD read errors
+  with ``max_recoveries=0``. Victims must land in the report's
+  ``failed`` slot as structured :class:`RequestFailure` records — the
+  server never dies, and every request is accounted finished-or-failed;
+* **dma** — KV prefetch on with injected DMA channel stalls/failures:
+  a pure time-cost fault class, so tokens stay identical to base.
+
+Emits ``BENCH_faults.json`` (gated in CI by ``scripts/check_bench.py
+--only BENCH_faults.json``) plus the chaos run's injected-event log
+``serving_faults.events.jsonl`` — a run artifact, never committed.
+
+  PYTHONPATH=src python benchmarks/serving_faults.py [--requests 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.core.engine import M2CacheEngine
+from repro.serving import (ContinuousBatchScheduler, requests_from_trace,
+                           shared_prefix_trace)
+from repro.serving.faults import FaultInjector
+
+PLAN_DIR = pathlib.Path(__file__).resolve().parent / "fault_plans"
+
+
+def build_requests(args, cfg):
+    events = shared_prefix_trace(
+        args.requests, rate_rps=args.rate, num_groups=2,
+        prefix_len=args.prefix_len, reuse_ratio=0.75, turns=2,
+        gen_len=(args.gen_len, args.gen_len + 4),
+        vocab_size=cfg.vocab_size, seed=args.seed)
+    return requests_from_trace(events, vocab_size=cfg.vocab_size,
+                               seed=args.seed)
+
+
+def run_serving(name, args, cfg, params, *, faults=None, max_recoveries=2,
+                kv_prefetch=False):
+    eng = M2CacheEngine(cfg=cfg, params=params,
+                        dram_capacity_gb=args.dram_gb,
+                        batched_decode=True, prefill_bucket=8,
+                        seed=args.seed)
+    sched = ContinuousBatchScheduler(
+        eng, max_batch=args.max_batch, hbm_kv_gb=args.hbm_kv_gb,
+        dram_kv_gb=args.dram_kv_gb, prefill_chunk=args.prefill_chunk,
+        kv_prefetch=kv_prefetch, faults=faults,
+        max_recoveries=max_recoveries)
+    rep = sched.run(build_requests(args, cfg))
+    s = rep.summary()
+    ks = rep.kv_stats
+    row = {
+        "tokens_per_s": s["tokens_per_s"],
+        "modeled_span_s": rep.modeled_span_s,
+        "preemptions": rep.preemptions,
+        "recoveries": rep.recoveries,
+        "failed_requests": len(rep.failed),
+        "faults_injected": float(s.get("faults_injected", 0.0)),
+        "gco2_recovery_total": float(s.get("gco2_recovery_total", 0.0)),
+        "kv_blocks_lost": ks["kv_blocks_lost"],
+        "kv_checksum_failures": ks["kv_checksum_failures"],
+        "kv_ssd_read_retries": ks["kv_ssd_read_retries"],
+        "kv_ssd_quarantined": bool(ks["kv_ssd_quarantined"]),
+        "kv_dram_overcommit_bytes": ks["kv_dram_overcommit_bytes"],
+        "failures": rep.failures(),
+        "tokens": {r.rid: r.final_tokens() for r in rep.requests},
+    }
+    print(f"{name:6s} tok/s={row['tokens_per_s']:9.1f} "
+          f"span={row['modeled_span_s']:.3f}s "
+          f"preempt={row['preemptions']} recov={row['recoveries']} "
+          f"failed={row['failed_requests']} "
+          f"faults={row['faults_injected']:.0f} "
+          f"quarantine={row['kv_ssd_quarantined']}")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=1e4,
+                    help="effectively-simultaneous arrivals: KV pressure "
+                         "peaks, forcing the preempt/spill traffic the "
+                         "fault points sit on")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prefix-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--dram-gb", type=float, default=0.5)
+    ap.add_argument("--hbm-kv-gb", type=float, default=1.1e-4,
+                    help="tight KV budget -> preemption + SSD spills")
+    ap.add_argument("--dram-kv-gb", type=float, default=5e-5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan", default=str(PLAN_DIR / "chaos.json"),
+                    help="recoverable-chaos fault plan (JSON)")
+    ap.add_argument("--hard-plan", default=str(PLAN_DIR / "hard.json"),
+                    help="unrecoverable-chaos fault plan (JSON)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_faults.json "
+                         "next to this script)")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config(args.arch, tiny=True)
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg,
+                           dtype=jnp.float32, m2=True)
+
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parent / "BENCH_faults.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+
+    chaos_inj = FaultInjector.from_plan(args.plan)
+    hard_inj = FaultInjector.from_plan(args.hard_plan)
+    # every KV-prefetch DMA transfer hiccups AND dies: the waiter redoes
+    # each one synchronously — worst-case bus chaos, still zero data risk
+    dma_inj = FaultInjector(seed=args.seed) \
+        .arm("dma.stall", rate=1.0, stall_s=2e-3) \
+        .arm("dma.fail", rate=1.0)
+    rows = {
+        "base": run_serving("base", args, cfg, params),
+        "chaos": run_serving("chaos", args, cfg, params,
+                             faults=chaos_inj, max_recoveries=4),
+        "hard": run_serving("hard", args, cfg, params,
+                            faults=hard_inj, max_recoveries=0),
+        "dma": run_serving("dma", args, cfg, params, faults=dma_inj,
+                           kv_prefetch=True),
+    }
+    chaos_inj.export_events_jsonl(
+        str(out.parent / "serving_faults.events.jsonl"))
+
+    base, chaos, hard, dma = (rows[k] for k in
+                              ("base", "chaos", "hard", "dma"))
+    n = args.requests
+    checks = {
+        # the server survived all three fault regimes (reaching here at
+        # all) and accounted for every request as finished-or-failed
+        "no_crash": True,
+        "all_accounted_chaos":
+            len(chaos["tokens"]) + chaos["failed_requests"] == n,
+        "all_accounted_hard":
+            len(hard["tokens"]) + hard["failed_requests"] == n,
+        # recoverable chaos: faults hit, a block was lost, the victim
+        # recovered, nobody failed — and every final stream is
+        # byte-identical to the fault-free run
+        "chaos_faults_injected": chaos["faults_injected"],
+        "chaos_recoveries": float(chaos["recoveries"]),
+        "chaos_recovered": chaos["recoveries"] >= 1
+            and chaos["kv_blocks_lost"] >= 1,
+        "chaos_no_failures": chaos["failed_requests"] == 0,
+        "chaos_tokens_identical": chaos["tokens"] == base["tokens"],
+        "chaos_checksum_detected": chaos["kv_checksum_failures"] >= 1,
+        "chaos_breaker_tripped": chaos["kv_ssd_quarantined"],
+        "chaos_recovery_carbon_attributed":
+            chaos["gco2_recovery_total"] > 0.0,
+        # unrecoverable chaos: structured failures, isolated blast
+        # radius (the untouched requests still finish byte-identically)
+        "hard_failed_requests": float(hard["failed_requests"]),
+        "hard_has_failures": hard["failed_requests"] >= 1,
+        "hard_failures_structured": all(
+            f.get("rid") is not None and f.get("reason")
+            and f.get("bid") is not None for f in hard["failures"]),
+        "hard_some_finished": len(hard["tokens"]) >= 1,
+        "hard_finished_identical": all(
+            toks == base["tokens"][rid]
+            for rid, toks in hard["tokens"].items()),
+        # DMA faults are a time cost, never a data hazard
+        "dma_faults_injected": dma["faults_injected"],
+        "dma_fired": dma["faults_injected"] >= 1,
+        "dma_tokens_identical": dma["tokens"] == base["tokens"],
+        "dma_no_failures": dma["failed_requests"] == 0,
+    }
+    for k, v in checks.items():
+        flag = "" if bool(v) else "  <-- EXPECTED TO HOLD"
+        print(f"  {k}: {v}{flag}")
+
+    for row in rows.values():                # keep the artifact small
+        row.pop("tokens")
+    payload = {"config": vars(args), "systems": rows, "checks": checks}
+    out.write_text(json.dumps(payload, indent=1, default=float))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -62,6 +62,8 @@ SMOKE_RUNS = {
                        "--requests", "8"],
     "BENCH_mixedprec.json": ["benchmarks/serving_mixedprec.py",
                              "--requests", "6"],
+    "BENCH_faults.json": ["benchmarks/serving_faults.py",
+                          "--requests", "8"],
 }
 
 #: per-artifact regression metrics: (name, dotted path [or "a/b" ratio],
@@ -112,6 +114,19 @@ METRICS = {
          "higher"),
         ("mixed_swap_out_bytes", "systems.mixed.kv_swap_out_bytes",
          "lower"),
+    ],
+    "BENCH_faults.json": [
+        # chaos gate (docs/RELIABILITY.md): faults must actually hit,
+        # the lost block's victim must recover, and relentless faults
+        # must land as structured failures — the boolean checks hold
+        # byte-identity; these band the committed magnitudes
+        ("chaos_faults_injected", "checks.chaos_faults_injected",
+         "higher"),
+        ("chaos_recoveries", "checks.chaos_recoveries", "higher"),
+        ("hard_failed_requests", "checks.hard_failed_requests",
+         "higher"),
+        ("dma_faults_injected", "checks.dma_faults_injected", "higher"),
+        ("chaos_tok_s", "systems.chaos.tokens_per_s", "higher"),
     ],
 }
 
@@ -202,9 +217,16 @@ def main():
                          "first, then compare")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="relative tolerance band (default 0.25)")
+    ap.add_argument("--only", default=None, metavar="BENCH_x.json",
+                    help="restrict the smoke runs and comparisons to one "
+                         "artifact (e.g. the CI chaos job gates only "
+                         "BENCH_faults.json)")
     args = ap.parse_args()
     if not args.run and not args.fresh:
         ap.error("--fresh DIR or --run is required")
+    if args.only and args.only not in METRICS:
+        ap.error(f"--only {args.only!r}: unknown artifact "
+                 f"(expected one of {sorted(METRICS)})")
 
     fresh_dir = pathlib.Path(args.fresh) if args.fresh else \
         pathlib.Path(tempfile.mkdtemp(prefix="bench_fresh_"))
@@ -214,6 +236,8 @@ def main():
         env["PYTHONPATH"] = str(ROOT / "src") + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
         for name, cmd in SMOKE_RUNS.items():
+            if args.only and name != args.only:
+                continue
             full = [sys.executable, str(ROOT / cmd[0]), *cmd[1:],
                     "--out", str(fresh_dir / name)]
             print("check_bench: running", " ".join(full))
@@ -221,6 +245,8 @@ def main():
 
     errors = []
     for name in sorted(METRICS):
+        if args.only and name != args.only:
+            continue
         base_path = BENCH_DIR / name
         fresh_path = fresh_dir / name
         if not base_path.exists():

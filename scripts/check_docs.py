@@ -13,6 +13,9 @@ Fails (exit 1) when:
     (the modeled-clock timebase, the Perfetto workflow, the
     kv-block-trace replay format) is missing from
     ``docs/OBSERVABILITY.md``;
+  * a required reliability topic (the fault-point taxonomy, the SSD
+    circuit breaker, request recovery, crash-consistent epochs) is
+    missing from ``docs/RELIABILITY.md``;
   * a top-level ``src/repro/*`` package is not mentioned in
     ``docs/ARCHITECTURE.md`` — the module map must not rot;
   * README does not link every ``docs/*.md`` page;
@@ -78,6 +81,22 @@ def main():
             errors.append(
                 f"docs/OBSERVABILITY.md does not document {topic!r} "
                 "(the trace format + taxonomy must stay written down)")
+
+    rel_doc = (ROOT / "docs" / "RELIABILITY.md").read_text() \
+        if (ROOT / "docs" / "RELIABILITY.md").exists() else ""
+    if not rel_doc:
+        errors.append("docs/RELIABILITY.md is missing")
+    for mod in ("faults.py", "serving_faults.py", "fault_plans"):
+        if mod not in rel_doc:
+            errors.append(f"docs/RELIABILITY.md does not mention {mod}")
+    for topic in ("fault point", "circuit breaker", "retry", "checksum",
+                  "quarantine", "recovery", "crash", "epoch",
+                  "fault plan", "RequestFailure", "max_recoveries",
+                  "what is not survived"):
+        if topic.lower() not in rel_doc.lower():
+            errors.append(
+                f"docs/RELIABILITY.md does not document {topic!r} "
+                "(the degradation contract must stay written down)")
 
     arch_doc = (ROOT / "docs" / "ARCHITECTURE.md").read_text() \
         if (ROOT / "docs" / "ARCHITECTURE.md").exists() else ""

@@ -41,6 +41,8 @@ class PrefetchStats:
     stall_s: float = 0.0          # total residual wait (modeled s)
     waits: int = 0                # wait() calls that found a transfer
     hits: int = 0                 # waits that found it already complete
+    dma_stalls: int = 0           # injected channel stalls (faults)
+    dma_failures: int = 0         # injected transfer failures (faults)
 
 
 class PrefetchEngine:
@@ -63,11 +65,21 @@ class PrefetchEngine:
         # modeled bus occupancy) + a stall instant when the compute front
         # catches an unfinished transfer
         self._recorder = None
+        # optional fault injector (repro.serving.faults.FaultInjector):
+        # "dma.stall" delays a transfer's finish time, "dma.fail" kills
+        # the transfer so the waiter must redo it synchronously — a time
+        # cost only, never data loss (payloads move host-side)
+        self._faults = None
+        self._failed: set = set()
 
     def attach_trace(self, recorder):
         """Record every transfer as a span on track ``dma:<channel>`` in
         ``recorder`` (a :class:`repro.obs.TraceRecorder`)."""
         self._recorder = recorder
+
+    def attach_faults(self, injector):
+        """Consult ``injector`` at issue time for DMA stalls/failures."""
+        self._faults = injector
 
     def add_channel(self, name: str, bw: float):
         """Register (or re-register) a channel; idempotent per name."""
@@ -88,6 +100,22 @@ class PrefetchEngine:
         SSD→DRAM must land before DRAM→HBM starts)."""
         start = max(now, self._free_at[channel], not_before)
         finish = start + nbytes / self._bw[channel]
+        if self._faults is not None:
+            rule = self._faults.fire("dma.stall",
+                                     detail={"channel": channel,
+                                             "key": str(key)})
+            if rule is not None:
+                # the channel hiccups: this transfer (and everything
+                # queued behind it) lands rule.stall_s late
+                finish += max(rule.stall_s, 0.0)
+                self.stats.dma_stalls += 1
+            if self._faults.fire("dma.fail",
+                                 detail={"channel": channel,
+                                         "key": str(key)}) is not None:
+                # the transfer dies in flight; wait() redoes it
+                # synchronously and charges the full retransfer
+                self._failed.add(key)
+                self.stats.dma_failures += 1
         self._free_at[channel] = finish
         self._inflight[key] = (finish, float(nbytes))
         self._inflight_ch[key] = channel
@@ -121,6 +149,18 @@ class PrefetchEngine:
         channel = self._inflight_ch.pop(key, "?")
         ready, nbytes = rec
         self.stats.waits += 1
+        if key in self._failed:
+            # injected in-flight failure: the bytes never arrived, so
+            # the waiter redoes the transfer synchronously from `now`
+            self._failed.discard(key)
+            stall = nbytes / self._bw.get(channel, float("inf"))
+            self.stats.stall_s += stall
+            self.stats.stalled_bytes += nbytes
+            if self._recorder is not None:
+                self._recorder.span(f"dma:{channel}", "retransfer", now,
+                                    now + stall, key=str(key),
+                                    nbytes=float(nbytes))
+            return stall
         stall = max(ready - now, 0.0)
         if stall > 0.0:
             self.stats.stall_s += stall
@@ -135,9 +175,11 @@ class PrefetchEngine:
 
     def cancel(self, key):
         """Drop an in-flight record (e.g. the block was evicted before
-        use). Issued bytes stay counted — the bus time was spent."""
+        use, or its ownership moved to another rid). Issued bytes stay
+        counted — the bus time was spent."""
         self._inflight.pop(key, None)
         self._inflight_ch.pop(key, None)
+        self._failed.discard(key)
 
     def snapshot(self) -> PrefetchStats:
         return dataclasses.replace(self.stats)

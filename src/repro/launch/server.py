@@ -194,9 +194,26 @@ def main():
                          "present (the reloaded subtree starts flash-"
                          "resident, so a restarted server warm-starts "
                          "with a nonzero hit rate), saved at exit")
+    ap.add_argument("--prefix-persist-interval", type=float, default=None,
+                    metavar="S",
+                    help="with --prefix-persist: also save the tree "
+                         "online every S modeled seconds as an atomic "
+                         "epoch (crash-consistent: a kill at any moment "
+                         "leaves the latest complete epoch loadable)")
     ap.add_argument("--prefill-bucket", type=int, default=8,
                     help="max same-width prompts stacked into one vmapped "
                          "prefill dispatch (<=1: per-session prefill)")
+    # fault injection / graceful degradation (docs/RELIABILITY.md)
+    ap.add_argument("--fault-plan", default=None, metavar="PATH",
+                    help="JSON fault plan for the seeded FaultInjector "
+                         "(see benchmarks/fault_plans/): inject SSD "
+                         "read/write errors, payload corruption and DMA "
+                         "stalls/failures at the tier boundaries; the "
+                         "server degrades and recovers instead of dying")
+    ap.add_argument("--max-recoveries", type=int, default=2,
+                    help="re-prefill attempts per request after a lost "
+                         "KV block before it fails cleanly into the "
+                         "report's failed list")
     # observability
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome trace_event JSON of the run "
@@ -220,6 +237,8 @@ def main():
                                   or args.prefix_persist):
         ap.error("--prefix-carbon-aware/--prefix-capacity/"
                  "--prefix-persist require --prefix-cache")
+    if args.prefix_persist_interval and not args.prefix_persist:
+        ap.error("--prefix-persist-interval requires --prefix-persist")
 
     eng = build_engine(args)
     vocab = eng.cfg.vocab_size if eng.cfg is not None else None
@@ -241,6 +260,10 @@ def main():
     if args.block_trace_out:
         from repro.obs import BlockTraceCollector
         block_trace = BlockTraceCollector()
+    injector = None
+    if args.fault_plan:
+        from repro.serving.faults import FaultInjector
+        injector = FaultInjector.from_plan(args.fault_plan)
     sched = ContinuousBatchScheduler(eng, max_batch=args.max_batch,
                                      hbm_kv_gb=args.hbm_kv_gb,
                                      dram_kv_gb=args.dram_kv_gb,
@@ -257,11 +280,16 @@ def main():
                                      args.prefix_carbon_aware,
                                      trace=recorder, metrics=metrics,
                                      block_trace=block_trace,
-                                     snapshotter=snapshotter)
+                                     snapshotter=snapshotter,
+                                     faults=injector,
+                                     max_recoveries=args.max_recoveries,
+                                     prefix_persist_dir=args.prefix_persist,
+                                     prefix_persist_interval_s=
+                                     args.prefix_persist_interval)
     persist = {}
     if args.prefix_persist:
-        import os
-        if os.path.exists(os.path.join(args.prefix_persist, "tree.json")):
+        from repro.serving.prefix_cache import PrefixCache
+        if PrefixCache.has_save(args.prefix_persist):
             persist["loaded"] = sched.prefix.load(args.prefix_persist)
     rep = sched.run(reqs)
     if args.prefix_persist:
@@ -286,6 +314,9 @@ def main():
     }
     if obs:
         out["obs"] = obs
+    if injector is not None:
+        out["faults"] = injector.stats()
+        out["failures"] = rep.failures()
     print(json.dumps(out, indent=1, default=float))
 
 

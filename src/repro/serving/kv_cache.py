@@ -82,6 +82,7 @@ from repro.core.cache.preloader import (PCIE_CHANNEL, SSD_CHANNEL,
                                         PrefetchEngine)
 from repro.core.cache.ssd_tier import SSDTier
 from repro.core.hw import HOST, HostHW
+from repro.serving.faults import KVBlockLostError, payload_checksum
 
 #: per-tier KV storage precision maps. HBM is always fp16 — the device
 #: pytree is native-width; quantization happens at the demote boundary.
@@ -146,6 +147,10 @@ class KVBlock:
     real: bool = False            # a real payload was ever captured
     precision: str = "fp16"       # storage precision of the current bytes
     full_nbytes: float = 0.0      # HBM-resident (fp16-tier) size
+    checksum: Optional[int] = None  # crc32 of the stored payload form,
+                                  # computed when the bytes cross a
+                                  # storage boundary (demote / spill),
+                                  # verified when they come back
 
     def __post_init__(self):
         if not self.full_nbytes:
@@ -161,7 +166,11 @@ class TieredKVCache:
                  prefetch: Optional[PrefetchEngine] = None,
                  store_payloads: bool = False,
                  precision_map: Optional[Dict[str, str]] = None,
-                 prefetch_headroom_frac: float = 0.05):
+                 prefetch_headroom_frac: float = 0.05,
+                 faults=None,
+                 ssd_retry_limit: int = 2,
+                 ssd_retry_backoff_s: float = 2e-3,
+                 ssd_breaker_threshold: int = 3):
         self.hw = hw
         # per-tier storage precision (fp16 everywhere by default —
         # byte-identical paging); any quantized tier flips self.quantized
@@ -231,6 +240,28 @@ class TieredKVCache:
         self._obs_trace = None           # repro.obs.TraceRecorder
         self._obs_blocks = None          # repro.obs.BlockTraceCollector
         self._obs_clock = None           # () -> raw modeled seconds
+        # fault injection + graceful degradation (docs/RELIABILITY.md):
+        # transient SSD IO errors get bounded retry-with-backoff; a run
+        # of consecutive failures trips the circuit breaker, which
+        # quarantines the flash tier (DRAM-only paging, over-commit
+        # tracked) until the process restarts
+        self.faults = faults             # repro.serving.faults.FaultInjector
+        self.ssd_retry_limit = int(ssd_retry_limit)
+        self.ssd_retry_backoff_s = float(ssd_retry_backoff_s)
+        self.ssd_breaker_threshold = int(ssd_breaker_threshold)
+        self.ssd_quarantined = False
+        self._ssd_consec_failures = 0
+        self.ssd_read_retries = 0
+        self.ssd_write_retries = 0
+        self.ssd_write_aborts = 0        # spills aborted (victim kept in DRAM)
+        self.retry_backoff_s = 0.0       # modeled seconds spent backing off
+        self.checksum_failures = 0
+        self.blocks_lost = 0
+        self.provider_faults = 0
+        self.prefetch_skips = 0          # prefetch reads skipped on faults
+        self.dram_overcommit_max = 0.0   # worst DRAM bytes over capacity
+        self._pending_fault_s = 0.0      # provider-retry backoff to fold
+                                         # into the next public charge
 
     # ------------------------------------------------------------------
     # observability: every tier transition as a block-access event
@@ -292,8 +323,111 @@ class TieredKVCache:
         return q, prec, float(Q.kv_payload_nbytes(q))
 
     def _charge(self, dt: float) -> float:
+        # fold in any provider-retry backoff accrued since the last
+        # public-API boundary, so fault handling shows up on the clock
+        dt += self._pending_fault_s
+        self._pending_fault_s = 0.0
         self.swap_s += dt
         return dt
+
+    # ------------------------------------------------------------------
+    # fault injection + graceful degradation
+
+    def attach_faults(self, injector):
+        """Consult ``injector`` at every storage/transfer boundary, and
+        wire it into the shared :class:`PrefetchEngine` so DMA-channel
+        stalls/failures hit the modeled async path too."""
+        self.faults = injector
+        if self.prefetch is not None and injector is not None:
+            self.prefetch.attach_faults(injector)
+
+    def _lost(self, blk: KVBlock, reason: str):
+        """A block's payload is unrecoverably gone — count it, trace it,
+        and raise for the scheduler's request-level recovery."""
+        self.blocks_lost += 1
+        self._emit("lost", blk, cause=reason)
+        raise KVBlockLostError(blk.rid, blk.bid, reason)
+
+    def _note_ssd_failure(self):
+        self._ssd_consec_failures += 1
+        if not self.ssd_quarantined and \
+                self._ssd_consec_failures >= self.ssd_breaker_threshold:
+            # circuit breaker: the flash tier has failed
+            # ssd_breaker_threshold times in a row — quarantine it and
+            # degrade to DRAM-only paging (spills stop; blocks already
+            # on flash stay readable so nothing is stranded)
+            self.ssd_quarantined = True
+            if self._obs_trace is not None:
+                t = self._obs_clock() if self._obs_clock else 0.0
+                self._obs_trace.instant(
+                    "kv", "ssd_quarantine", t,
+                    consecutive_failures=self._ssd_consec_failures)
+
+    def _note_ssd_success(self):
+        self._ssd_consec_failures = 0
+
+    def _ssd_write(self, blk: KVBlock, banks: dict):
+        """Write a block's stored form to flash with bounded
+        retry-with-backoff. Returns ``(ok, modeled_seconds)``; a
+        permanent failure leaves the caller to keep the victim in DRAM
+        (a failed write never loses data)."""
+        dt = 0.0
+        backoff = self.ssd_retry_backoff_s
+        for attempt in range(1 + self.ssd_retry_limit):
+            if attempt:
+                self.ssd_write_retries += 1
+                self.retry_backoff_s += backoff
+                dt += backoff
+                backoff *= 2.0
+            if self.faults is not None and self.faults.fire(
+                    "ssd.write", detail={"bid": blk.bid}) is not None:
+                self._note_ssd_failure()
+                continue
+            self.ssd.write_layer(blk.bid, banks, flush_meta=False)
+            self._note_ssd_success()
+            return True, dt
+        self.ssd_write_aborts += 1
+        return False, dt
+
+    def _ssd_read(self, blk: KVBlock, *, attempts: Optional[int] = None):
+        """Read a block back from flash with bounded retry-with-backoff
+        and checksum verification of real payloads. Returns
+        ``(banks, modeled_seconds)`` with the arrays copied out of the
+        memmaps; raises :class:`KVBlockLostError` when every attempt
+        fails (the caller decides whether that means loss — a demand
+        promote escalates, a prefetch just skips)."""
+        if attempts is None:
+            attempts = 1 + self.ssd_retry_limit
+        dt = 0.0
+        backoff = self.ssd_retry_backoff_s
+        reason = "ssd read error"
+        for attempt in range(attempts):
+            if attempt:
+                self.ssd_read_retries += 1
+                self.retry_backoff_s += backoff
+                dt += backoff
+                backoff *= 2.0
+            if self.faults is not None and self.faults.fire(
+                    "ssd.read", detail={"bid": blk.bid}) is not None:
+                self._note_ssd_failure()
+                continue
+            banks = {k: np.array(v)
+                     for k, v in self.ssd.read_layer(blk.bid).items()}
+            if self.faults is not None:
+                banks = self.faults.corrupt("ssd.corrupt", banks,
+                                            detail={"bid": blk.bid})
+            if self.store_payloads and blk.real \
+                    and blk.checksum is not None \
+                    and payload_checksum(banks) != blk.checksum:
+                # a flipped bit between flash and host: never decode it
+                # silently — count, retry (the file may re-read clean)
+                self.checksum_failures += 1
+                self._note_ssd_failure()
+                reason = "payload checksum mismatch (ssd)"
+                continue
+            self._note_ssd_success()
+            return banks, dt
+        raise KVBlockLostError(blk.rid, blk.bid, reason)
 
     # ------------------------------------------------------------------
     # real-residency plumbing (store_payloads mode)
@@ -323,6 +457,13 @@ class TieredKVCache:
         provider = self._providers.get(blk.rid)
         if provider is None:
             return None
+        if self.faults is not None and self.faults.fire(
+                "provider.export", detail={"bid": blk.bid}) is not None:
+            # transient device→host capture error: the device copy is
+            # still intact, so one retried export (after a modeled
+            # backoff, folded in at the next public charge) recovers
+            self.provider_faults += 1
+            self._pending_fault_s += self.ssd_retry_backoff_s
         blk.data = provider.export(blk.tok0, self.block_tokens,
                                    scrub=scrub)
         blk.real = True
@@ -342,6 +483,12 @@ class TieredKVCache:
             return
         provider = self._providers.get(blk.rid)
         if provider is not None:
+            if self.faults is not None and self.faults.fire(
+                    "provider.import", detail={"bid": blk.bid}) is not None:
+                # transient host→device restore error: the verified host
+                # payload is intact, so one retried import recovers
+                self.provider_faults += 1
+                self._pending_fault_s += self.ssd_retry_backoff_s
             provider.import_(blk.tok0, Q.kv_dequantize_payload(payload))
             blk.data = None
         else:
@@ -384,8 +531,13 @@ class TieredKVCache:
             p = self.dram.dynamic[bid]
             payload = p if "kv" not in p else None
         elif blk.tier == "ssd":
-            payload = {k: np.array(v)
-                       for k, v in self.ssd.read_layer(bid).items()}
+            try:
+                payload, _ = self._ssd_read(blk)
+            except KVBlockLostError:
+                # unreadable/corrupt flash copy: returning None makes
+                # every consumer fall back to recomputing the prefix —
+                # a corrupt payload is never decoded silently
+                return None
         if payload is None or raw:
             return payload
         return Q.kv_dequantize_payload(payload)
@@ -425,7 +577,9 @@ class TieredKVCache:
             blk = KVBlock(bid=bid, rid=rid, nbytes=stored,
                           tier="ssd", tok0=self._next_tok0[rid],
                           real=payload is not None, precision=prec,
-                          full_nbytes=self.block_bytes)
+                          full_nbytes=self.block_bytes,
+                          checksum=payload_checksum(payload)
+                          if payload is not None else None)
             self._next_tok0[rid] += self.block_tokens
             self.blocks[bid] = blk
             self.table.setdefault(rid, []).append(bid)
@@ -450,7 +604,7 @@ class TieredKVCache:
         and the NVMe leg of the transfer clock — carry the packed form."""
         dt = 0.0
         while self.dram.used_bytes + need_bytes > self.dram.capacity \
-                and self.dram.dynamic:
+                and self.dram.dynamic and not self.ssd_quarantined:
             bid = next(iter(self.dram.dynamic))
             blk = self.blocks[bid]
             payload = self.dram.dynamic[bid]
@@ -461,12 +615,20 @@ class TieredKVCache:
                 _, prec, stored = self._quantize_for(blk, None, "ssd")
                 if stored != blk.nbytes:
                     payload = self._payload(prec)
-            self.ssd.write_layer(bid, payload, flush_meta=False)
+            ok, wdt = self._ssd_write(blk, payload)
+            dt += wdt
+            if not ok:
+                # write retries exhausted: the victim stays in DRAM
+                # (over-commit) rather than risking a torn flash copy —
+                # a failed demote-direction write never loses data
+                break
             self.dram.drop(bid)
             blk.tier = "ssd"
             blk.data = None                    # canonical copy now on flash
             blk.precision = prec
             blk.nbytes = stored
+            if blk.real:
+                blk.checksum = payload_checksum(payload)
             self.ssd_write_full_bytes += blk.full_nbytes
             self.quant_saved_bytes += blk.full_nbytes - stored
             self.swap_out_bytes += stored
@@ -495,9 +657,24 @@ class TieredKVCache:
         payload, prec, stored = self._quantize_for(blk, payload, "dram")
         if payload is not None:
             blk.data = payload        # quantized dict is the host master
+            if blk.real:
+                # the bytes cross a storage boundary here: checksum the
+                # stored form so promote can verify it came back intact
+                blk.checksum = payload_checksum(payload)
         dt = self._spill_dram_to_ssd(stored)
-        self.dram.insert(bid, payload if payload is not None
-                         else self._payload(prec))
+        banks = payload if payload is not None else self._payload(prec)
+        nb = self.dram._nbytes(banks)
+        if self.dram.used_bytes + nb > self.dram.capacity:
+            # degraded mode (SSD quarantined or spill aborted): insert
+            # over capacity instead of letting the FIFO insert silently
+            # drop victims whose only copy now lives in DRAM
+            self.dram.dynamic[bid] = banks
+            self.dram.used_bytes += nb
+            self.dram_overcommit_max = max(
+                self.dram_overcommit_max,
+                self.dram.used_bytes - self.dram.capacity)
+        else:
+            self.dram.insert(bid, banks)
         blk.tier = "dram"
         blk.precision = prec
         blk.nbytes = stored
@@ -530,23 +707,44 @@ class TieredKVCache:
         the promoted block then occupies its full fp16 footprint in HBM,
         so eviction makes room for ``full_nbytes`` up front."""
         blk = self.blocks[bid]
-        dt = self._evict_for(blk.full_nbytes, protect)
+        dt = 0.0
         payload = None
         prev = blk.tier
         stored = blk.nbytes              # packed bytes actually moved
         stored_prec = blk.precision
         if blk.tier == "dram":
             if blk.real:
-                payload = blk.data or self.dram.dynamic.get(bid)
+                payload = blk.data if blk.data is not None \
+                    else self.dram.dynamic.get(bid)
+                if payload is not None and self.faults is not None:
+                    corrupted = self.faults.corrupt(
+                        "dram.corrupt", payload, detail={"bid": bid})
+                    if corrupted is not payload:
+                        # a bit flipped in the DRAM master itself — the
+                        # canonical copy is what got hit, so there is
+                        # nothing clean left to retry against
+                        payload = blk.data = corrupted
+                        self.dram.dynamic[bid] = corrupted
+                if payload is not None and blk.checksum is not None \
+                        and payload_checksum(payload) != blk.checksum:
+                    self.checksum_failures += 1
+                    self._lost(blk, "payload checksum mismatch (dram)")
+            dt += self._evict_for(blk.full_nbytes, protect)
             self.dram.drop(bid)
             dt += stored / self.hw.pcie_bw
         elif blk.tier == "ssd":
-            banks = self.ssd.read_layer(bid)       # real flash read
+            try:
+                banks, rdt = self._ssd_read(blk)   # real flash read,
+            except KVBlockLostError as e:          # retried + verified
+                self._lost(blk, e.reason)
             if blk.real:
-                payload = {k: np.array(v) for k, v in banks.items()}
+                payload = banks
+            dt += rdt + self._evict_for(blk.full_nbytes, protect)
             self.ssd.delete_layer(bid, flush_meta=False)
             dt += stored / self.hw.ssd_bw \
                 + stored / self.hw.pcie_bw
+        else:
+            dt += self._evict_for(blk.full_nbytes, protect)
         blk.tier = "hbm"
         blk.nbytes = blk.full_nbytes
         blk.precision = self.precision["hbm"]
@@ -580,12 +778,26 @@ class TieredKVCache:
         stored_prec = blk.precision
         if blk.tier == "dram":
             if blk.real:
-                payload = blk.data or self.dram.dynamic.get(bid)
+                payload = blk.data if blk.data is not None \
+                    else self.dram.dynamic.get(bid)
+                if payload is not None and blk.checksum is not None \
+                        and payload_checksum(payload) != blk.checksum:
+                    # corrupt DRAM master noticed opportunistically:
+                    # leave it for the demand promote to escalate
+                    self.checksum_failures += 1
+                    self.prefetch_skips += 1
+                    return 0.0
             self.dram.drop(bid)
         elif blk.tier == "ssd":
-            banks = self.ssd.read_layer(bid)       # real flash read
+            try:                                   # single attempt: the
+                banks, _ = self._ssd_read(blk, attempts=1)
+            except KVBlockLostError:               # opportunistic path
+                # skips on any fault — the flash copy stays intact and
+                # the demand promote retries with backoff
+                self.prefetch_skips += 1
+                return 0.0
             if blk.real:
-                payload = {k: np.array(v) for k, v in banks.items()}
+                payload = banks
             self.ssd.delete_layer(bid, flush_meta=False)
             key = ("kv_ssd", bid)
             not_before = self.prefetch.issue(SSD_CHANNEL, key, stored,
@@ -694,20 +906,27 @@ class TieredKVCache:
         time ``now`` (zero once it landed); the rest pay the serial
         promotion path as before."""
         dt = 0.0
-        for bid in self.table.get(rid, []):
-            blk = self.blocks[bid]
-            if blk.tier != "hbm":
-                sync = self._promote(bid, protect)
-                self.resume_sync_s += sync
-                dt += sync
-            elif self.prefetch is not None and now is not None \
-                    and self.prefetch.in_flight(("kv", bid)):
-                stall = self.prefetch.wait(("kv", bid), now + dt)
-                if stall > 0.0:
-                    self.prefetch_stall_s += stall
-                else:
-                    self.prefetch_overlap_bytes += blk.nbytes
-                dt += stall
+        try:
+            for bid in self.table.get(rid, []):
+                blk = self.blocks[bid]
+                if blk.tier != "hbm":
+                    sync = self._promote(bid, protect)
+                    self.resume_sync_s += sync
+                    dt += sync
+                elif self.prefetch is not None and now is not None \
+                        and self.prefetch.in_flight(("kv", bid)):
+                    stall = self.prefetch.wait(("kv", bid), now + dt)
+                    if stall > 0.0:
+                        self.prefetch_stall_s += stall
+                    else:
+                        self.prefetch_overlap_bytes += blk.nbytes
+                    dt += stall
+        except KVBlockLostError:
+            # a block is unrecoverably gone: charge what was already
+            # promoted, then let the scheduler run request-level
+            # recovery (re-enqueue + deterministic re-prefill)
+            self._charge(dt)
+            raise
         self.touch(rid)
         return self._charge(dt)
 
@@ -749,6 +968,12 @@ class TieredKVCache:
         moved = blocks[start_block:start_block + nblocks]
         del blocks[start_block:start_block + nblocks]
         for bid in moved:
+            if self.prefetch is not None:
+                # ownership changes mid-flight: a DMA issued against the
+                # old owner must not land (and charge its stall) under
+                # the new rid — without this a completed transfer could
+                # promote into a rid whose session no longer exists
+                self.prefetch.cancel(("kv", bid))
             self.blocks[bid].rid = dst_rid
             self._emit("adopt", self.blocks[bid], chrome=False,
                        cause=f"from:{src_rid}")
@@ -830,4 +1055,15 @@ class TieredKVCache:
                                   if b.precision == "int8"),
             "kv_blocks_int4": sum(1 for b in self.blocks.values()
                                   if b.precision == "int4"),
+            # fault injection + graceful degradation (docs/RELIABILITY.md)
+            "kv_ssd_quarantined": 1.0 if self.ssd_quarantined else 0.0,
+            "kv_ssd_read_retries": self.ssd_read_retries,
+            "kv_ssd_write_retries": self.ssd_write_retries,
+            "kv_ssd_write_aborts": self.ssd_write_aborts,
+            "kv_retry_backoff_s": self.retry_backoff_s,
+            "kv_checksum_failures": self.checksum_failures,
+            "kv_blocks_lost": self.blocks_lost,
+            "kv_provider_faults": self.provider_faults,
+            "kv_prefetch_skips": self.prefetch_skips,
+            "kv_dram_overcommit_bytes": self.dram_overcommit_max,
         }

@@ -59,12 +59,14 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.carbon import CarbonIntensityTrace
+# payload_checksum moved to faults.py (shared with TieredKVCache's
+# demote/promote verification); re-exported here for back-compat
+from repro.serving.faults import payload_checksum  # noqa: F401
 from repro.serving.kv_cache import TieredKVCache
 
 BlockKey = Tuple[int, ...]
@@ -74,17 +76,6 @@ BlockKey = Tuple[int, ...]
 #: cannot be verified — recomputing their prefixes is always safe,
 #: serving silently corrupted KV never is).
 PERSIST_FORMAT_VERSION = 2
-
-
-def payload_checksum(banks: Dict[str, np.ndarray]) -> int:
-    """crc32 over a payload's arrays, keys sorted, dtype/shape mixed in —
-    a truncated, retyped or reshaped file fails verification too."""
-    h = 0
-    for k in sorted(banks):
-        a = np.ascontiguousarray(banks[k])
-        h = zlib.crc32(f"{k}:{a.dtype.str}:{a.shape}".encode(), h)
-        h = zlib.crc32(a.tobytes(), h)
-    return h
 
 
 @dataclasses.dataclass
@@ -169,6 +160,8 @@ class PrefixCache:
         self.reclaimed_tokens = 0
         self.splits = 0
         self.load_rejects = 0
+        self.invalidations = 0
+        self.invalidated_tokens = 0
         # obs hook (attach_obs): None -> zero-cost no-ops
         self._obs_trace = None
         self._obs_clock = None
@@ -400,6 +393,45 @@ class PrefixCache:
         return ntok
 
     # ------------------------------------------------------------------
+    def invalidate(self, node_rid: int, *, now: float = 0.0) -> int:
+        """Poisoned-subtree recovery (docs/RELIABILITY.md): the node
+        owning KV rid ``node_rid`` lost a block payload unrecoverably,
+        so the node *and every descendant* (their KV extends the lost
+        prefix — unusable without it) leave the tree. Holders' lock
+        lists are scrubbed so suspend/resume/release never touch the
+        freed rids; future lookups miss and recompute, which is always
+        safe. Returns the invalidated token count."""
+        target = None
+        stack = [self.root]
+        while stack and target is None:
+            n = stack.pop()
+            for c in n.children.values():
+                if c.rid == node_rid:
+                    target = c
+                    break
+                stack.append(c)
+        if target is None:
+            return 0
+        del target.parent.children[target.blocks[0]]
+        freed = 0
+        stack = [target]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            self.kv.free(n.rid)              # drops pin + every tier
+            for r in list(n.holders):
+                held = self._locked.get(r)
+                if held is not None and n in held:
+                    held.remove(n)
+            freed += n.ntokens
+            self.nodes -= 1
+        self.cached_tokens -= freed
+        self.invalidations += 1
+        self.invalidated_tokens += freed
+        self._obs("invalidate", node_rid=node_rid, tokens=freed)
+        return freed
+
+    # ------------------------------------------------------------------
     def _reclaim(self, now: float):
         """Free coldest unheld leaves until under ``capacity_tokens``.
         Nodes with any holder — running *or preempted* — are immune.
@@ -431,26 +463,75 @@ class PrefixCache:
                                       parent))
 
     # ------------------------------------------------------------------
-    # flash persistence: the tree survives server restarts
+    # flash persistence: the tree survives server restarts.
+    #
+    # Crash consistency (docs/RELIABILITY.md): every save is an atomic
+    # *epoch* — the whole tree (structure + payload files) is written
+    # into ``<dir>/.tmp-epoch-N`` and then renamed to
+    # ``<dir>/epoch-N`` in one directory rename. A crash mid-save
+    # leaves only a ``.tmp-*`` directory (cleaned up by the next save),
+    # never a half-written epoch; load() takes the newest epoch that
+    # fully verifies and falls back to older ones, so the worst a crash
+    # costs is one save interval of tree growth.
 
-    def save(self, dir_path: str) -> Dict[str, int]:
-        """Persist the radix tree to ``dir_path``: the node structure as
-        ``tree.json`` plus every node block's actual KV payload as
-        memmap files (the same on-disk format as the SSD weight tier).
-        A restarted server :meth:`load`-s the tree SSD-resident — first
-        hits pay NVMe+PCIe promotion instead of prefill compute, the
-        warm-restart story of the flash-resident prefix cache. Surrogate
-        (analytic) blocks persist structure-only. Returns counters."""
+    @staticmethod
+    def _epoch_dirs(dir_path: str) -> List[str]:
+        """Epoch subdirectories of a save root, oldest → newest."""
+        import os
+        import re
+        if not os.path.isdir(dir_path):
+            return []
+        found = []
+        for name in os.listdir(dir_path):
+            m = re.fullmatch(r"epoch-(\d+)", name)
+            if m and os.path.isdir(os.path.join(dir_path, name)):
+                found.append((int(m.group(1)),
+                              os.path.join(dir_path, name)))
+        return [p for _, p in sorted(found)]
+
+    @classmethod
+    def latest_epoch_dir(cls, dir_path: str) -> Optional[str]:
+        """Newest epoch directory under ``dir_path``; the root itself
+        when it holds a legacy flat (pre-epoch) save; None when there is
+        nothing to load."""
+        import os
+        epochs = cls._epoch_dirs(dir_path)
+        if epochs:
+            return epochs[-1]
+        if os.path.exists(os.path.join(dir_path, "tree.json")):
+            return dir_path
+        return None
+
+    @classmethod
+    def has_save(cls, dir_path: str) -> bool:
+        """Does ``dir_path`` hold anything :meth:`load` could try?"""
+        return cls.latest_epoch_dir(dir_path) is not None
+
+    def save(self, dir_path: str, *, keep_epochs: int = 2) -> Dict[str, int]:
+        """Persist the radix tree as a fresh atomic epoch under
+        ``dir_path``: the node structure as ``tree.json`` plus every
+        node block's actual KV payload as memmap files (the same
+        on-disk format as the SSD weight tier), written to a temp
+        directory and renamed into place. A restarted server
+        :meth:`load`-s the tree SSD-resident — first hits pay NVMe+PCIe
+        promotion instead of prefill compute, the warm-restart story of
+        the flash-resident prefix cache. Surrogate (analytic) blocks
+        persist structure-only. The newest ``keep_epochs`` epochs are
+        kept (older ones + stale temp dirs are pruned). Returns
+        counters."""
         import json
         import os
+        import shutil
         from repro.core.cache.ssd_tier import SSDTier
         os.makedirs(dir_path, exist_ok=True)
-        # drop exactly the previous save's payload files (the ones its
-        # meta.json records) — never unrelated files in the directory
-        store = SSDTier(dir_path)
-        for pid in sorted({int(k.split(".", 1)[0][1:])
-                           for k in store._meta}):
-            store.delete_layer(pid, flush_meta=False)
+        epochs = self._epoch_dirs(dir_path)
+        nxt = 1 + (int(os.path.basename(epochs[-1]).split("-")[1])
+                   if epochs else 0)
+        tmp = os.path.join(dir_path, f".tmp-epoch-{nxt:06d}")
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        store = SSDTier(tmp)
         # persistence reads are startup/shutdown copies, not serving-time
         # promotion traffic: keep the tier's flash-read stats clean (the
         # mirror of adopt_external's bytes_written guard)
@@ -486,12 +567,22 @@ class PrefixCache:
                           "checksums": checksums})
         store.flush_meta()
         self.kv.ssd.bytes_read, self.kv.ssd.reads = read0, reads0
-        with open(os.path.join(dir_path, "tree.json"), "w") as f:
+        with open(os.path.join(tmp, "tree.json"), "w") as f:
             json.dump({"format_version": PERSIST_FORMAT_VERSION,
                        "block_tokens": self.block_tokens,
                        "nodes": nodes}, f)
-        self._obs("save", nodes=len(nodes), payload_blocks=pid)
-        return {"nodes": len(nodes), "payload_blocks": pid}
+        # the commit point: one atomic rename publishes the epoch
+        os.rename(tmp, os.path.join(dir_path, f"epoch-{nxt:06d}"))
+        for name in os.listdir(dir_path):
+            if name.startswith(".tmp-epoch-"):
+                shutil.rmtree(os.path.join(dir_path, name),
+                              ignore_errors=True)
+        for old in self._epoch_dirs(dir_path)[:-keep_epochs]:
+            shutil.rmtree(old, ignore_errors=True)
+        self._obs("save", nodes=len(nodes), payload_blocks=pid,
+                  epoch=nxt)
+        return {"nodes": len(nodes), "payload_blocks": pid,
+                "epoch": nxt}
 
     def _reject_load(self, reason: str) -> Dict[str, int]:
         self.load_rejects += 1
@@ -499,25 +590,48 @@ class PrefixCache:
         return {"nodes": 0, "payload_blocks": 0, "rejected": reason}
 
     def load(self, dir_path: str) -> Dict[str, int]:
-        """Rebuild a :meth:`save`-d tree into this (empty) cache. Every
+        """Rebuild a :meth:`save`-d tree into this (empty) cache,
+        trying the newest epoch first and falling back to older
+        consistent epochs (then a legacy flat-layout save). Every
         reloaded node's blocks are created *flash-resident* in the
         TieredKVCache (`adopt_external`): the warm-started server pays
         real NVMe reads + modeled promotion seconds on first hit, and
         match results are identical to the pre-restart tree's.
 
-        Checksum + version handshake: every payload file is verified
-        against the crc recorded at save time *before anything is
-        adopted*. A version mismatch, a missing/truncated file or a crc
-        mismatch rejects the whole tree — the cache stays empty (prompts
+        Checksum + version handshake per candidate: every payload file
+        is verified against the crc recorded at save time *before
+        anything is adopted*. A version mismatch, a missing/truncated
+        file or a crc mismatch rejects that candidate — the next older
+        epoch is tried; with none left the cache stays empty (prompts
         recompute, which is always safe) and the result carries a
-        ``rejected`` reason; a ``load_rejected`` trace instant is
+        ``rejected`` reason; ``load_rejected`` trace instants are
         emitted when a recorder is attached."""
+        import os
+        assert self.nodes == 0, "load() requires an empty prefix cache"
+        cands = list(reversed(self._epoch_dirs(dir_path)))
+        if os.path.exists(os.path.join(dir_path, "tree.json")):
+            cands.append(dir_path)          # legacy flat (pre-epoch) save
+        if not cands:
+            return self._reject_load("no saved tree found")
+        res = None
+        for cand in cands:
+            res = self._load_one(cand)
+            if "rejected" not in res:
+                return res
+        return res
+
+    def _load_one(self, dir_path: str) -> Dict[str, int]:
+        """Verify-then-adopt one save directory (an epoch dir or a
+        legacy flat layout); rejection leaves the cache untouched."""
         import json
         import os
         from repro.core.cache.ssd_tier import SSDTier
-        assert self.nodes == 0, "load() requires an empty prefix cache"
-        with open(os.path.join(dir_path, "tree.json")) as f:
-            spec = json.load(f)
+        try:
+            with open(os.path.join(dir_path, "tree.json")) as f:
+                spec = json.load(f)
+        except (OSError, ValueError):
+            return self._reject_load(
+                f"tree.json unreadable in {os.path.basename(dir_path)}")
         version = spec.get("format_version")
         if version != PERSIST_FORMAT_VERSION:
             return self._reject_load(
@@ -589,4 +703,6 @@ class PrefixCache:
             "prefix_reclaimed_tokens": self.reclaimed_tokens,
             "prefix_splits": self.splits,
             "prefix_load_rejects": self.load_rejects,
+            "prefix_invalidations": self.invalidations,
+            "prefix_invalidated_tokens": self.invalidated_tokens,
         }

@@ -26,6 +26,9 @@ class RequestState(enum.Enum):
     RUNNING = "running"
     PREEMPTED = "preempted"
     FINISHED = "finished"
+    FAILED = "failed"          # recovery attempts exhausted — the request
+                               # lands in ServingReport.failed, the server
+                               # keeps serving everyone else
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +65,21 @@ SLO_CLASSES = {
 
 
 @dataclasses.dataclass
+class RequestFailure:
+    """Structured error slot for a request that exhausted its recovery
+    budget — the clean-failure contract: the server never dies, the
+    caller gets a machine-readable reason instead of a crash."""
+    rid: int
+    reason: str                # e.g. "payload checksum mismatch (ssd)"
+    bid: int                   # the block whose loss was fatal
+    recovery_attempts: int     # recoveries tried before giving up
+    t_failed_s: float          # run-relative modeled time of the failure
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
 class ServingRequest:
     rid: int
     prompt_len: int
@@ -87,6 +105,16 @@ class ServingRequest:
     gco2_decode_g: float = 0.0
     session: object = None                    # engine DecodeSession
     _true_prompt: Optional[tuple] = None      # memoized unpadded tokens
+    # fault recovery (docs/RELIABILITY.md): when a KV block is
+    # unrecoverably lost, the request is re-enqueued and re-prefilled
+    # from its prompt + the tokens already emitted — those move into
+    # ``recovered_prefix`` so the final stream stays byte-identical.
+    # ``gco2_recovery_g`` is the slice of prefill carbon spent redoing
+    # work a fault destroyed.
+    recoveries: int = 0
+    recovered_prefix: list = dataclasses.field(default_factory=list)
+    failure: Optional["RequestFailure"] = None
+    gco2_recovery_g: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -129,8 +157,22 @@ class ServingRequest:
 
     @property
     def total_tokens(self) -> int:
-        """Tokens this request pins in KV: prompt + generated."""
-        return self.prompt_len + self.generated
+        """Tokens this request pins in KV: prompt + generated. After a
+        recovery the re-emitted tokens live inside ``prompt_len``
+        (re-prefill extends the prompt), so subtract the overlap."""
+        return self.prompt_len + self.generated - len(self.recovered_prefix)
+
+    def final_tokens(self) -> list:
+        """The request's complete emitted token stream: tokens generated
+        before the last recovery (now part of the re-prefill prompt)
+        followed by the current session's tokens. Byte-identical to the
+        fault-free run under greedy decode + pure block-chunked
+        prefill."""
+        out = list(self.recovered_prefix)
+        if self.session is not None and getattr(self.session, "tokens",
+                                                None) is not None:
+            out.extend(int(t) for t in self.session.tokens)
+        return out
 
     @property
     def own_kv_tokens(self) -> int:

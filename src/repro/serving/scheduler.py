@@ -35,10 +35,12 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import carbon as carbon_mod
+from repro.serving.faults import KVBlockLostError
 from repro.serving.kv_cache import TieredKVCache
 from repro.serving.policy import FCFSPolicy, SchedulingPolicy
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.request import RequestState, ServingRequest
+from repro.serving.request import (RequestFailure, RequestState,
+                                   ServingRequest)
 from repro.serving.schema import validate_summary
 
 
@@ -122,6 +124,18 @@ class ServingReport:
     prefill_steps: int = 0              # iterations that ran any prefill
     prefill_dispatches: int = 0         # real prefill graphs launched
     prefix_stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # fault injection + recovery (docs/RELIABILITY.md): requests whose
+    # recovery budget ran out land here as structured failures — the
+    # clean-failure contract is that the server finishes the run and the
+    # caller reads the reason from the report instead of a stack trace
+    failed: List[ServingRequest] = dataclasses.field(default_factory=list)
+    recoveries: int = 0                 # re-enqueue + re-prefill events
+    fault_stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def failures(self) -> List[dict]:
+        """The structured error slots of failed requests (JSON-ready)."""
+        return [r.failure.to_dict() for r in self.failed
+                if r.failure is not None]
 
     @property
     def tokens_per_s(self) -> float:
@@ -201,6 +215,15 @@ class ServingReport:
             out["kv_ssd_capacity_stretch"] = \
                 self.kv_stats["kv_ssd_write_full_bytes"] / written \
                 if written else 1.0
+        if self.fault_stats or self.failed:
+            out["faults_injected"] = \
+                float(self.fault_stats.get("faults_injected", 0))
+            out["failed_requests"] = len(self.failed)
+            out["recovered_requests"] = sum(
+                1 for r in self.requests if r.recoveries)
+            out["recoveries_total"] = self.recoveries
+            out["gco2_recovery_total"] = sum(
+                r.gco2_recovery_g for r in self.requests + self.failed)
         out.update(self.slo_summary())
         out["mean_intensity_g_kwh"] = \
             self.carbon["mean_intensity_g_kwh"]
@@ -267,7 +290,10 @@ class ContinuousBatchScheduler:
                  prefix_capacity_tokens: int = 65536,
                  prefix_carbon_aware: bool = False,
                  trace=None, metrics=None, block_trace=None,
-                 snapshotter=None):
+                 snapshotter=None,
+                 faults=None, max_recoveries: int = 2,
+                 prefix_persist_dir: Optional[str] = None,
+                 prefix_persist_interval_s: Optional[float] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if prefill_chunk is not None and prefill_chunk < 1:
@@ -307,6 +333,19 @@ class ContinuousBatchScheduler:
                 insert_precision="carbon" if kv.quantized else None)
         self.prefix = prefix_cache
         self._t0 = 0.0                   # run()'s clock origin
+        # -- fault injection + graceful degradation (docs/RELIABILITY.md)
+        # ``faults`` plugs a seeded FaultInjector into every storage and
+        # transfer boundary below; ``max_recoveries`` bounds how many
+        # times a request may be re-prefilled after losing a KV block
+        # before it fails *cleanly* into ServingReport.failed.
+        self.faults = faults
+        self.max_recoveries = int(max_recoveries)
+        self.prefix_persist_dir = prefix_persist_dir
+        self.prefix_persist_interval_s = prefix_persist_interval_s
+        self._last_persist = 0.0
+        self.prefix_online_saves = 0
+        if faults is not None:
+            self.kv.attach_faults(faults)
         # -- observability wiring (purely passive: no clock advances) --
         self.trace = trace
         self.metrics = metrics
@@ -350,7 +389,15 @@ class ContinuousBatchScheduler:
                     "serving_waiting_requests", "requests queued/preempted"),
                 "hbm_kv": metrics.gauge(
                     "kv_hbm_used_bytes", "KV bytes resident in HBM"),
+                "recoveries": metrics.counter(
+                    "serving_faults_recoveries_total",
+                    "requests re-enqueued after a lost KV block"),
+                "failed": metrics.counter(
+                    "serving_faults_failed_requests_total",
+                    "requests failed after exhausting recoveries"),
             }
+        if faults is not None:
+            faults.attach_obs(trace=trace, metrics=metrics)
 
     # -- per-request phase spans (queued → prefill → decode → finish) ----
     def _obs_phase_begin(self, r: ServingRequest, name: str):
@@ -436,6 +483,114 @@ class ContinuousBatchScheduler:
         req.state = RequestState.RUNNING if req.prefilled \
             else RequestState.PREFILLING
         active.append(req)
+
+    # -- fault recovery (docs/RELIABILITY.md) ---------------------------
+    def _on_block_lost(self, err: KVBlockLostError, req: ServingRequest,
+                       waiting: List[ServingRequest],
+                       failed: List[ServingRequest]) -> int:
+        """A KV block payload is unrecoverably gone during admission.
+
+        ``err.rid < 0`` names a shared prefix-tree node: the poisoned
+        subtree is invalidated (future lookups recompute) and the victim
+        request simply re-queues — its own state is intact.  ``err.rid
+        >= 0`` names the request's own block: the request is torn down
+        and deterministically re-prefilled from its prompt + the tokens
+        it already emitted (see :meth:`_recover_request`).  Returns the
+        number of recoveries charged (0 or 1)."""
+        now = self.engine.clock - self._t0
+        if self.trace is not None:
+            self.trace.instant("sched", "block_lost", rid=err.rid,
+                               bid=err.bid, victim=req.rid,
+                               reason=err.reason)
+        if err.rid < 0 and self.prefix is not None:
+            self.prefix.invalidate(err.rid, now=now)
+            # drop the victim's hold on the (now partially gone) hit
+            # path; re-admission redoes the lookup against the pruned
+            # tree and prefills whatever is no longer served by it
+            if req.state is RequestState.PREEMPTED:
+                self.prefix.suspend(req.rid)
+            else:
+                self.prefix.release(req.rid, now=now)
+            waiting.append(req)
+            return 0
+        return self._recover_request(req, waiting, failed, err)
+
+    def _recover_request(self, req: ServingRequest,
+                         waiting: List[ServingRequest],
+                         failed: List[ServingRequest],
+                         err: KVBlockLostError) -> int:
+        """Tear down ``req`` and re-enqueue it for a fresh prefill over
+        prompt + already-emitted tokens; greedy decode + block-pure
+        prefill make the continued stream byte-identical to the
+        fault-free run.  After ``max_recoveries`` attempts the request
+        fails cleanly into ``failed`` with a structured
+        :class:`RequestFailure` — the server never dies."""
+        eng = self.engine
+        now = eng.clock - self._t0
+        emitted = []
+        if req.session is not None and getattr(req.session, "tokens",
+                                               None) is not None:
+            emitted = [int(t) for t in req.session.tokens]
+        if self.prefix is not None:
+            self.prefix.release(req.rid, now=now)
+        self.kv.free(req.rid)
+        req.session = None
+        req.recoveries += 1
+        self._obs_phase_end(req)
+        if req.recoveries > self.max_recoveries:
+            req.state = RequestState.FAILED
+            req.failure = RequestFailure(
+                rid=req.rid, reason=err.reason, bid=err.bid,
+                recovery_attempts=req.recoveries - 1, t_failed_s=now)
+            failed.append(req)
+            if self.trace is not None:
+                self.trace.instant("sched", "request_failed", rid=req.rid,
+                                   reason=err.reason,
+                                   attempts=req.recoveries - 1)
+            if self._m is not None:
+                self._m["failed"].inc()
+            return 0
+        if req.prompt is not None and emitted:
+            # fold the emitted tokens into the prompt: the re-prefill
+            # recomputes their KV (block-pure), and they move to
+            # ``recovered_prefix`` so final_tokens() stays the full
+            # stream and total_tokens doesn't double-count
+            base = np.asarray(req.prompt).reshape(-1)[-req.prompt_len:]
+            req.prompt = np.concatenate(
+                [base, np.asarray(emitted, dtype=base.dtype)])
+            req.prompt_len += len(emitted)
+            req.recovered_prefix.extend(emitted)
+        req._true_prompt = None
+        req.prompt_done = 0
+        req.prefix_hit = 0
+        req.state = RequestState.QUEUED
+        if self.trace is not None:
+            self.trace.instant("sched", "recover", rid=req.rid,
+                               attempt=req.recoveries,
+                               replay_tokens=len(emitted))
+        if self._m is not None:
+            self._m["recoveries"].inc()
+        waiting.append(req)
+        return 1
+
+    def _persist_tick(self):
+        """Crash-consistent periodic online save of the prefix tree:
+        every ``prefix_persist_interval_s`` modeled seconds the tree is
+        saved as a fresh atomic epoch (write-temp-then-rename), so a
+        crash at any moment leaves the latest *complete* epoch
+        loadable."""
+        if (self.prefix is None or self.prefix_persist_dir is None
+                or not self.prefix_persist_interval_s):
+            return
+        eng = self.engine
+        if eng.clock - self._last_persist < self.prefix_persist_interval_s:
+            return
+        self.prefix.save(self.prefix_persist_dir)
+        self.prefix_online_saves += 1
+        self._last_persist = eng.clock
+        if self.trace is not None:
+            self.trace.instant("sched", "prefix_save",
+                               epoch=self.prefix_online_saves)
 
     def _prefill_step(self, active: List[ServingRequest]) -> tuple:
         """One prefill chunk for every PREFILLING request — executed and
@@ -556,12 +711,18 @@ class ContinuousBatchScheduler:
         waiting: List[ServingRequest] = []
         active: List[ServingRequest] = []    # PREFILLING + RUNNING
         finished: List[ServingRequest] = []
+        failed: List[ServingRequest] = []    # clean structured failures
+        recoveries = 0
         i = 0
         clock_start = eng.clock
         # arrival times are trace-relative; rebase all request timestamps
         # to this run's clock origin so latency = finish - arrival holds
         # (the engine clock starts at warmup and accumulates across runs)
         self._t0 = clock_start
+        if self.faults is not None:
+            # scripted fault windows are run-relative, like arrival_s
+            self.faults.set_clock(lambda: self.engine.clock - self._t0)
+        self._last_persist = clock_start
         accountant = carbon_mod.CarbonAccountant(
             device_name=eng.device_name, ssd_active=eng.use_ssd,
             trace=self.carbon_trace)
@@ -612,6 +773,7 @@ class ContinuousBatchScheduler:
                                     waiting=len(waiting))
                 if self.snapshotter is not None:
                     self.snapshotter.tick(eng.clock)
+                self._persist_tick()
                 continue
             # admit in policy order up to max_batch; stop when the KV
             # budget says no (carbon-held requests are skipped, not
@@ -635,7 +797,14 @@ class ContinuousBatchScheduler:
                                     [r.rid for r in active]) and active:
                     break
                 waiting.remove(req)
-                self._admit(req, active)
+                try:
+                    self._admit(req, active)
+                except KVBlockLostError as e:
+                    # a block needed for residency is unrecoverably gone:
+                    # route to recovery (re-queue / re-prefill / clean
+                    # failure) and keep serving everyone else
+                    recoveries += self._on_block_lost(e, req, waiting,
+                                                      failed)
             # one prefill chunk per prefilling request, then resolve KV
             # pressure (possibly preempting mid-prefill), then decode
             comp, chunks, pf_stall, pf_overlap, pf_disp, pf_deltas = \
@@ -710,6 +879,11 @@ class ContinuousBatchScheduler:
                     r.gco2_g += g
                     if phase == "prefill":
                         r.gco2_prefill_g += g
+                        if r.recoveries:
+                            # every post-recovery prefill slice is redo
+                            # work a fault destroyed — the reliability
+                            # tax, reported as gco2_recovery_total
+                            r.gco2_recovery_g += g
                     else:
                         r.gco2_decode_g += g
                 if self._m is not None:
@@ -739,6 +913,7 @@ class ContinuousBatchScheduler:
                 self._m["hbm_kv"].set(kv.hbm_used)
             if self.snapshotter is not None:
                 self.snapshotter.tick(eng.clock)
+            self._persist_tick()
 
         span = eng.clock - clock_start
         if horizon_s is not None and horizon_s > span:
@@ -769,6 +944,7 @@ class ContinuousBatchScheduler:
             prefix_stats["prefix_hit_rate"] = \
                 prefix_stats["prefix_hit_tokens"] \
                 / max(prefix_stats["prefix_lookup_tokens"], 1)
+            prefix_stats["prefix_online_saves"] = self.prefix_online_saves
         return ServingReport(
             requests=finished, modeled_span_s=span,
             total_tokens=total_tokens, decode_steps=decode_steps,
@@ -782,4 +958,7 @@ class ContinuousBatchScheduler:
             + kv_stats["kv_prefetch_overlap_bytes"],
             prefill_steps=prefill_steps,
             prefill_dispatches=prefill_dispatches,
-            prefix_stats=prefix_stats)
+            prefix_stats=prefix_stats,
+            failed=failed, recoveries=recoveries,
+            fault_stats=self.faults.stats()
+            if self.faults is not None else {})

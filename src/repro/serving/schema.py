@@ -40,6 +40,9 @@ SUMMARY_OPTIONAL = frozenset({
     "tpot_attainment", "deadline_attainment",
     # mixed-precision KV tiers on (kv_precision with a quantized tier)
     "kv_transfer_saved_bytes", "kv_ssd_capacity_stretch",
+    # fault injection attached or requests failed (docs/RELIABILITY.md)
+    "faults_injected", "failed_requests", "recovered_requests",
+    "recoveries_total", "gco2_recovery_total",
 })
 
 #: key families whose suffix is data-dependent (one per SLO class)

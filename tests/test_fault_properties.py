@@ -1,0 +1,110 @@
+"""Property: a single flipped byte in a stored KV payload can never
+decode silently (docs/RELIABILITY.md).
+
+For every tier precision the stack stores on flash — fp16 passthrough,
+int8, packed int4 (values + group scales) — flipping *any one byte* of
+*any one file* of a demoted block must be caught by the payload
+checksum at promote time and routed to the loss/recovery path
+(:class:`KVBlockLostError`); the corrupted bytes must never reach the
+provider's ``import_``. Runs under ``tests/_hypothesis_compat.py``:
+real Hypothesis explores file/offset/bit choices when installed, the
+deterministic fallback samples a fixed spread otherwise.
+"""
+import glob
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serving.faults import KVBlockLostError
+from repro.serving.kv_cache import TieredKVCache
+
+_PRECISIONS = {
+    "fp16": None,                                     # all-fp16 default
+    "int8": "hbm:fp16,dram:int8,ssd:int8",
+    "int4": "mixed",                                  # ssd holds packed int4
+}
+
+
+class _RecordingProvider:
+    """Deterministic per-tok0 payloads; only records imports (the
+    property is that the corrupted block's import never happens, so no
+    tolerance logic is needed)."""
+
+    def __init__(self, bt: int):
+        self.bt = bt
+        self.imported = []
+
+    def _arr(self, tok0):
+        rng = np.random.default_rng(tok0 + 1)
+        return rng.standard_normal((self.bt, 8)).astype(np.float32)
+
+    def export(self, tok0, ntokens, *, scrub=False):
+        return {"k": self._arr(tok0), "v": self._arr(tok0) * -1.0}
+
+    def import_(self, tok0, payload):
+        self.imported.append(tok0)
+
+
+def _spill_one_block(td: str, precision_map):
+    """Build a cache with exactly one flash-resident real block and
+    return ``(kv, provider, ssd_tok0)``."""
+    bt, bpt = 4, 256.0
+    bb = bt * bpt
+    kv = TieredKVCache(num_layers=2, d_model=8,
+                       hbm_capacity_bytes=4 * bb,
+                       # small enough that even int8/int4 stored forms
+                       # overflow DRAM and one block spills to flash
+                       dram_capacity_bytes=0.25 * bb,
+                       ssd_dir=os.path.join(td, "kv"),
+                       block_tokens=bt, bytes_per_token=bpt,
+                       store_payloads=True, precision_map=precision_map)
+    prov = _RecordingProvider(bt)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 8, protect=[0])
+    kv.swap_out(0)
+    ssd = [b for b in kv.table[0] if kv.blocks[b].tier == "ssd"]
+    assert len(ssd) == 1
+    return kv, prov, kv.blocks[ssd[0]].tok0
+
+
+@given(prec=st.sampled_from(sorted(_PRECISIONS)),
+       fpick=st.integers(min_value=0, max_value=10**6),
+       opick=st.integers(min_value=0, max_value=10**6),
+       bit=st.integers(min_value=0, max_value=7))
+@settings(max_examples=30, deadline=None)
+def test_any_single_byte_flip_is_detected_at_promote(prec, fpick, opick,
+                                                     bit):
+    with tempfile.TemporaryDirectory() as td:
+        kv, prov, ssd_tok0 = _spill_one_block(td, _PRECISIONS[prec])
+        files = sorted(glob.glob(os.path.join(td, "kv", "*.bin")))
+        assert files                                  # real flash files
+        path = files[fpick % len(files)]
+        size = os.path.getsize(path)
+        assert size > 0
+        with open(path, "r+b") as f:
+            f.seek(opick % size)
+            byte = f.read(1)[0]
+            f.seek(opick % size)
+            f.write(bytes([byte ^ (1 << bit)]))       # the upset
+        with pytest.raises(KVBlockLostError) as ei:
+            kv.ensure_resident(0, protect=[0])
+        assert "checksum" in ei.value.reason
+        assert kv.checksum_failures >= 1
+        assert kv.blocks_lost == 1
+        # the corrupted block never reached the provider
+        assert ssd_tok0 not in prov.imported
+
+
+def test_clean_payload_promotes_for_every_precision():
+    """Control arm: without the flip, every precision promotes its
+    flash block back through the same checksum gate."""
+    for prec in sorted(_PRECISIONS):
+        with tempfile.TemporaryDirectory() as td:
+            kv, prov, ssd_tok0 = _spill_one_block(td, _PRECISIONS[prec])
+            kv.ensure_resident(0, protect=[0])
+            assert ssd_tok0 in prov.imported, prec
+            assert kv.checksum_failures == 0
+            assert kv.blocks_lost == 0

@@ -1,0 +1,458 @@
+"""Fault injection + graceful degradation (docs/RELIABILITY.md).
+
+Covers the reliability subsystem bottom-up:
+
+* the seeded :class:`FaultInjector` itself — deterministic replay,
+  scripted modeled-time windows, per-rule budgets, plan round-trips;
+* DMA-channel faults through :class:`PrefetchEngine` (stalls priced
+  into the finish time, failed transfers redone synchronously);
+* :class:`TieredKVCache` degradation — bounded SSD retry/backoff,
+  checksum-verified promotes, the SSD circuit breaker + DRAM
+  over-commit quarantine mode, provider capture/restore retries, and
+  the loss path (:class:`KVBlockLostError`);
+* scheduler-level recovery — a lost block re-enqueues the victim and
+  re-prefills it deterministically (final streams byte-identical to
+  the fault-free run), while exhausted recovery budgets fail cleanly
+  into ``ServingReport.failed`` without killing the server.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.cache.preloader import PrefetchEngine
+from repro.core.engine import M2CacheEngine
+from repro.serving import (ContinuousBatchScheduler, requests_from_trace)
+from repro.serving.faults import (FaultInjector, KVBlockLostError,
+                                  flip_one_byte, payload_checksum)
+from repro.serving.kv_cache import TieredKVCache
+from repro.serving.workload import ArrivalEvent
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector unit behaviour
+
+
+def test_injector_deterministic_replay():
+    """Same seed + plan -> the identical fire/skip sequence."""
+    def run(seed):
+        inj = FaultInjector(seed=seed).arm("ssd.read", rate=0.5)
+        return [inj.fire("ssd.read") is not None for _ in range(64)]
+    a, b = run(7), run(7)
+    assert a == b
+    assert any(a) and not all(a)            # rate actually partial
+    assert run(8) != a                      # seed matters
+
+
+def test_injector_streams_independent_per_point():
+    """Arming a second point must not perturb the first point's stream."""
+    solo = FaultInjector(seed=3).arm("ssd.read", rate=0.5)
+    both = FaultInjector(seed=3).arm("ssd.read", rate=0.5) \
+                                .arm("dma.stall", rate=0.5)
+    seq_solo, seq_both = [], []
+    for _ in range(32):
+        seq_solo.append(solo.fire("ssd.read") is not None)
+        seq_both.append(both.fire("ssd.read") is not None)
+        both.fire("dma.stall")
+    assert seq_solo == seq_both
+
+
+def test_injector_scripted_window_and_budget():
+    now = [0.0]
+    inj = FaultInjector(seed=0, clock=lambda: now[0])
+    inj.arm("ssd.write", rate=1.0, after_s=1.0, until_s=2.0, max_fires=2)
+    assert inj.fire("ssd.write") is None           # before window
+    now[0] = 1.5
+    assert inj.fire("ssd.write") is not None       # in window
+    assert inj.fire("ssd.write") is not None
+    assert inj.fire("ssd.write") is None           # budget exhausted
+    now[0] = 2.5
+    inj2 = FaultInjector(seed=0, clock=lambda: now[0])
+    inj2.arm("ssd.write", rate=1.0, after_s=1.0, until_s=2.0)
+    assert inj2.fire("ssd.write") is None          # past window
+    assert inj.stats()["faults_injected"] == 2
+    assert inj.checked["ssd.write"] == 4
+
+
+def test_injector_plan_roundtrip_and_unknown_point(tmp_path):
+    inj = FaultInjector(seed=11).arm("dma.stall", rate=0.25, stall_s=0.5) \
+                                .arm("ssd.read", rate=1.0, max_fires=3)
+    plan = inj.plan_dict()
+    clone = FaultInjector.from_plan(plan)
+    assert clone.plan_dict() == plan
+    path = tmp_path / "plan.json"
+    path.write_text(json.dumps(plan))
+    from_file = FaultInjector.from_plan(str(path))
+    assert from_file.plan_dict() == plan
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultInjector().arm("ssd.explode")
+
+
+def test_injector_event_log_export(tmp_path):
+    inj = FaultInjector(seed=0).arm("ssd.read", rate=1.0, max_fires=2)
+    inj.fire("ssd.read", detail={"bid": 4})
+    inj.fire("ssd.read")
+    out = tmp_path / "faults.events.jsonl"
+    assert inj.export_events_jsonl(str(out)) == 2
+    lines = [json.loads(x) for x in out.read_text().splitlines()]
+    assert lines[0]["point"] == "ssd.read" and lines[0]["detail"] == {"bid": 4}
+
+
+def test_flip_one_byte_always_breaks_checksum():
+    rng = np.random.default_rng(0)
+    banks = {"k": np.arange(32, dtype=np.float32).reshape(4, 8),
+             "v": np.ones(16, dtype=np.int8)}
+    ref = payload_checksum(banks)
+    for _ in range(20):
+        flipped = flip_one_byte(banks, rng)
+        assert payload_checksum(flipped) != ref
+        # original untouched (flip copies)
+        assert payload_checksum(banks) == ref
+
+
+# ---------------------------------------------------------------------------
+# DMA faults through the PrefetchEngine
+
+
+def test_dma_stall_delays_finish_and_is_counted():
+    pf = PrefetchEngine()
+    pf.add_channel("ssd", 1e9)
+    inj = FaultInjector(seed=0).arm("dma.stall", rate=1.0, stall_s=0.25)
+    pf.attach_faults(inj)
+    pf.issue("ssd", ("kv", 1), 1e9, 0.0)
+    # transfer takes 1.0s on the channel + 0.25s injected stall
+    stall = pf.wait(("kv", 1), now=1.05)
+    assert stall == pytest.approx(0.20, abs=1e-9)
+    assert pf.stats.dma_stalls == 1
+
+
+def test_dma_fail_forces_synchronous_retransfer():
+    pf = PrefetchEngine()
+    pf.add_channel("ssd", 1e9)
+    inj = FaultInjector(seed=0).arm("dma.fail", rate=1.0)
+    pf.attach_faults(inj)
+    pf.issue("ssd", ("kv", 2), 5e8, 0.0)
+    # the in-flight transfer died: waiter pays the full synchronous cost
+    stall = pf.wait(("kv", 2), now=10.0)
+    assert stall == pytest.approx(0.5)
+    assert pf.stats.dma_failures == 1
+    assert not pf.in_flight(("kv", 2))
+
+
+# ---------------------------------------------------------------------------
+# TieredKVCache degradation (no jax: _ArrayProvider fakes the session)
+
+
+class _ArrayProvider:
+    """Deterministic per-tok0 payloads; records scrubs and imports and
+    verifies imports deliver exactly the exported bits."""
+
+    def __init__(self, bt: int):
+        self.bt = bt
+        self.scrubbed = []
+        self.imported = {}
+
+    def _arr(self, tok0):
+        rng = np.random.default_rng(tok0 + 1)
+        return rng.standard_normal((self.bt, 8)).astype(np.float32)
+
+    def export(self, tok0, ntokens, *, scrub=False):
+        assert ntokens == self.bt
+        if scrub:
+            self.scrubbed.append(tok0)
+        return {"k": self._arr(tok0), "v": self._arr(tok0) * -1.0}
+
+    def import_(self, tok0, payload):
+        np.testing.assert_array_equal(payload["k"], self._arr(tok0))
+        np.testing.assert_array_equal(payload["v"], self._arr(tok0) * -1.0)
+        self.imported[tok0] = payload
+
+
+def _kv(tmp_path, *, hbm_blocks, dram_blocks, block_tokens=4,
+        bytes_per_token=256.0, **kw):
+    bb = block_tokens * bytes_per_token
+    return TieredKVCache(
+        num_layers=2, d_model=8,
+        hbm_capacity_bytes=hbm_blocks * bb,
+        dram_capacity_bytes=dram_blocks * bb,
+        ssd_dir=str(tmp_path / "kv"), block_tokens=block_tokens,
+        bytes_per_token=bytes_per_token, store_payloads=True, **kw)
+
+
+def _spilled(tmp_path, inj=None, **kw):
+    """2-block request with one block on SSD, one in DRAM."""
+    kv = _kv(tmp_path, hbm_blocks=4, dram_blocks=1, faults=inj, **kw)
+    prov = _ArrayProvider(kv.block_tokens)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 8, protect=[0])
+    kv.swap_out(0)
+    tiers = sorted(kv.blocks[b].tier for b in kv.table[0])
+    assert tiers == ["dram", "ssd"]
+    return kv, prov
+
+
+def test_ssd_read_transient_fault_retried(tmp_path):
+    """One injected read error: the bounded retry succeeds, backoff is
+    charged to the modeled clock, and the payload is still bit-exact."""
+    inj = FaultInjector(seed=1).arm("ssd.read", rate=1.0, max_fires=1)
+    kv, prov = _spilled(tmp_path, inj)
+    dt = kv.ensure_resident(0, protect=[0])
+    assert sorted(prov.imported) == [0, 4]         # bit-exact imports
+    assert kv.ssd_read_retries == 1
+    assert kv.retry_backoff_s > 0.0
+    assert dt >= kv.retry_backoff_s                # backoff priced in
+    assert not kv.ssd_quarantined                  # success reset breaker
+    assert kv.blocks_lost == 0
+
+
+def test_ssd_read_exhaustion_loses_block_and_trips_breaker(tmp_path):
+    """Relentless read errors: retries exhaust, the block is reported
+    lost (never silently decoded) and the breaker quarantines the SSD."""
+    inj = FaultInjector(seed=1).arm("ssd.read", rate=1.0)
+    kv, prov = _spilled(tmp_path, inj)
+    with pytest.raises(KVBlockLostError) as ei:
+        kv.ensure_resident(0, protect=[0])
+    assert ei.value.rid == 0
+    assert kv.blocks_lost == 1
+    assert kv.ssd_read_retries == kv.ssd_retry_limit
+    assert kv.ssd_quarantined                      # 3 consecutive failures
+    ssd_tok0 = [kv.blocks[b].tok0 for b in kv.table[0]
+                if kv.blocks[b].tier == "ssd"]
+    assert all(t not in prov.imported for t in ssd_tok0)
+
+
+def test_ssd_corruption_detected_by_checksum_never_imported(tmp_path):
+    """A silent bit flip on the SSD read path must hit the checksum
+    wall, not the provider: the corrupted payload is never imported."""
+    inj = FaultInjector(seed=2).arm("ssd.corrupt", rate=1.0)
+    kv, prov = _spilled(tmp_path, inj)
+    with pytest.raises(KVBlockLostError, match="checksum"):
+        kv.ensure_resident(0, protect=[0])
+    assert kv.checksum_failures >= 1
+    assert kv.blocks_lost == 1
+    # the ssd-resident block's tok0 never reached import_
+    ssd_tok0 = [kv.blocks[b].tok0 for b in kv.table[0]
+                if kv.blocks[b].tier == "ssd"]
+    assert all(t not in prov.imported for t in ssd_tok0)
+
+
+def test_dram_corruption_detected_by_checksum(tmp_path):
+    inj = FaultInjector(seed=3).arm("dram.corrupt", rate=1.0)
+    kv = _kv(tmp_path, hbm_blocks=4, dram_blocks=4, faults=inj)
+    prov = _ArrayProvider(kv.block_tokens)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 4, protect=[0])                    # 1 block
+    kv.swap_out(0)                                 # -> DRAM
+    assert kv.blocks[kv.table[0][0]].tier == "dram"
+    with pytest.raises(KVBlockLostError, match="dram"):
+        kv.ensure_resident(0, protect=[0])
+    assert kv.checksum_failures == 1
+    assert prov.imported == {}
+
+
+def test_ssd_write_failure_aborts_spill_and_quarantines(tmp_path):
+    """Demote-direction faults never lose data: the spill aborts, the
+    victim over-commits DRAM, the breaker quarantines the flash tier,
+    and every payload still promotes back bit-exact."""
+    inj = FaultInjector(seed=4).arm("ssd.write", rate=1.0)
+    # DRAM sized below the *actual* payload footprint so the aborted
+    # spill is forced into visible over-commit
+    kv = _kv(tmp_path, hbm_blocks=4, dram_blocks=0.25, faults=inj)
+    prov = _ArrayProvider(kv.block_tokens)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 8, protect=[0])                    # 2 blocks
+    kv.swap_out(0)                                 # spill attempt fails
+    assert kv.ssd_write_aborts == 1
+    assert kv.ssd_write_retries >= 1
+    assert kv.ssd_quarantined                      # 3 consecutive failures
+    tiers = [kv.blocks[b].tier for b in kv.table[0]]
+    assert tiers == ["dram", "dram"]               # nothing lost to flash
+    assert kv.dram_overcommit_max > 0.0            # degraded mode visible
+    kv.ensure_resident(0, protect=[0])
+    assert sorted(prov.imported) == [0, 4]         # bit-exact after abort
+
+
+def test_quarantined_ssd_still_serves_resident_blocks(tmp_path):
+    """Quarantine stops new spills but already-flash-resident blocks
+    stay readable (the files are fine; the device is just suspect)."""
+    kv, prov = _spilled(tmp_path)                  # no faults: clean spill
+    kv.ssd_quarantined = True
+    kv.ensure_resident(0, protect=[0])
+    assert sorted(prov.imported) == [0, 4]
+
+
+def test_provider_faults_counted_and_charged(tmp_path):
+    inj = FaultInjector(seed=5).arm("provider.export", rate=1.0,
+                                    max_fires=1) \
+                               .arm("provider.import", rate=1.0,
+                                    max_fires=1)
+    kv, prov = _spilled(tmp_path, inj)             # export fires on capture
+    assert kv.provider_faults == 1
+    dt = kv.ensure_resident(0, protect=[0])        # import fires on restore
+    assert kv.provider_faults == 2
+    assert dt > 0.0
+    assert sorted(prov.imported) == [0, 4]         # retry still bit-exact
+
+
+def test_prefetch_read_fault_skips_block_without_loss(tmp_path):
+    """Background promotion is best-effort: an injected read error on
+    the prefetch path skips the block (stays on SSD), and the later
+    demand ensure_resident still succeeds."""
+    pf = PrefetchEngine()
+    inj = FaultInjector(seed=6).arm("ssd.read", rate=1.0, max_fires=1)
+    kv = _kv(tmp_path, hbm_blocks=8, dram_blocks=1, prefetch=pf,
+             faults=inj)
+    prov = _ArrayProvider(kv.block_tokens)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 8, protect=[0])
+    kv.swap_out(0)
+    kv.prefetch_resident(0, now=0.0)
+    assert kv.prefetch_skips >= 1
+    assert kv.blocks_lost == 0
+    kv.ensure_resident(0, protect=[0], now=100.0)
+    assert sorted(prov.imported) == [0, 4]
+
+
+def test_adopt_blocks_cancels_inflight_prefetch(tmp_path):
+    """Ownership transfer mid-flight: adopt_blocks must cancel the
+    block's queued DMA so a stale transfer can't land under the old
+    owner (regression for the free-path cancel as well)."""
+    pf = PrefetchEngine()
+    kv = _kv(tmp_path, hbm_blocks=8, dram_blocks=8, prefetch=pf)
+    prov = _ArrayProvider(kv.block_tokens)
+    kv.register_provider(0, prov)
+    kv.alloc(0, 8, protect=[0])
+    kv.swap_out(0)                                 # both blocks to DRAM
+    kv.prefetch_resident(0, now=0.0)               # issue promotions
+    bids = list(kv.table[0])
+    assert any(pf.in_flight(("kv", b)) for b in bids)
+    kv.adopt_blocks(0, -5, 2)                      # donate to a tree node
+    assert all(not pf.in_flight(("kv", b)) for b in bids)
+    kv.free(-5)
+    assert all(not pf.in_flight(("kv", b)) for b in bids)
+
+
+def test_prefix_node_loss_invalidates_subtree(tmp_path):
+    """A prefix-tree node (rid < 0) losing a block poisons its whole
+    subtree: invalidate() unlinks it, frees its KV, scrubs holders'
+    lock lists, and future lookups miss (recompute is always safe)."""
+    from repro.serving import PrefixCache
+    kv = _kv(tmp_path, hbm_blocks=8, dram_blocks=1)
+    pc = PrefixCache(kv)
+    kv.register_provider(0, _ArrayProvider(kv.block_tokens))
+    toks = tuple(range(13))                        # 3 whole blocks + tail
+    pc.lock(0, toks)
+    kv.extend(0, len(toks))
+    assert pc.insert(0, toks, prefix_hit=0) == 12
+    pc.release(0)
+    pc.lock(1, toks)
+    node_rid = pc.node_rids(1)[0]
+    assert node_rid < 0
+    kv.swap_out(node_rid)                          # age to DRAM + SSD
+    assert any(kv.blocks[b].tier == "ssd" for b in kv.table[node_rid])
+    inj = FaultInjector(seed=7).arm("ssd.read", rate=1.0)
+    kv.attach_faults(inj)
+    with pytest.raises(KVBlockLostError) as ei:
+        kv.ensure_resident(node_rid, protect=[1, node_rid])
+    assert ei.value.rid == node_rid                # routed as node loss
+    freed = pc.invalidate(ei.value.rid)
+    assert freed == 12
+    assert pc.match(toks).hit_tokens == 0          # future lookups miss
+    assert node_rid not in kv.table                # KV fully freed
+    assert not pc._locked.get(1)                   # holder list scrubbed
+    pc.release(1)                                  # must not blow up
+    st = pc.stats()
+    assert st["prefix_invalidations"] == 1
+    assert st["prefix_invalidated_tokens"] == 12
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level recovery (real tiny model: byte-identical streams)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config("qwen2.5-14b", tiny=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32,
+                           m2=True)
+    return cfg, params
+
+
+def _serve_faulted(tmp_path, tag, cfg, params, *, faults=None,
+                   max_recoveries=2):
+    eng = M2CacheEngine(cfg=cfg, params=params, dram_capacity_gb=0.5,
+                        ssd_dir=str(tmp_path / tag))
+    events = [ArrivalEvent(rid=i, arrival_s=0.0, prompt_len=pl,
+                           max_new_tokens=gl)
+              for i, (pl, gl) in enumerate(zip((18, 16, 12, 19, 14, 10),
+                                               (6, 10, 8, 7, 9, 6)))]
+    reqs = requests_from_trace(events, vocab_size=cfg.vocab_size)
+    sched = ContinuousBatchScheduler(eng, max_batch=4,
+                                     hbm_kv_gb=0.8e-4,
+                                     dram_kv_gb=1.6e-5,
+                                     kv_prefetch=False,
+                                     faults=faults,
+                                     max_recoveries=max_recoveries)
+    rep = sched.run(reqs)
+    return rep
+
+
+@pytest.mark.slow
+def test_recovery_streams_byte_identical_real(tmp_path, tiny_model):
+    """A lost block mid-run re-enqueues the victim; deterministic
+    re-prefill from prompt + already-emitted tokens makes every final
+    stream byte-identical to the fault-free run."""
+    cfg, params = tiny_model
+    base = _serve_faulted(tmp_path, "base", cfg, params)
+    assert base.preemptions > 0                    # budget tight enough
+    want = {r.rid: r.final_tokens() for r in base.requests}
+
+    inj = FaultInjector(seed=0).arm("ssd.read", rate=1.0, max_fires=3)
+    rep = _serve_faulted(tmp_path, "chaos", cfg, params, faults=inj)
+    assert inj.total_fired >= 1                    # faults actually hit
+    assert rep.recoveries >= 1
+    assert not rep.failed                          # everyone finished
+    assert len(rep.requests) == len(want)
+    for r in rep.requests:
+        assert r.final_tokens() == want[r.rid], r.rid
+    recovered = [r for r in rep.requests if r.recoveries]
+    assert recovered
+    # recovery work shows up in the carbon attribution
+    assert any(r.gco2_recovery_g > 0.0 for r in recovered)
+    s = rep.summary()
+    assert s["recovered_requests"] == len(recovered)
+    assert s["failed_requests"] == 0
+    assert s["faults_injected"] == inj.total_fired
+
+
+@pytest.mark.slow
+def test_exhausted_recovery_fails_cleanly_real(tmp_path, tiny_model):
+    """Relentless faults + max_recoveries=0: the victim lands in
+    ``report.failed`` as a structured RequestFailure, the server keeps
+    serving, and every still-finished stream matches the fault-free
+    run byte-for-byte."""
+    cfg, params = tiny_model
+    base = _serve_faulted(tmp_path, "base2", cfg, params)
+    want = {r.rid: r.final_tokens() for r in base.requests}
+
+    inj = FaultInjector(seed=0).arm("ssd.read", rate=1.0)
+    rep = _serve_faulted(tmp_path, "hard", cfg, params, faults=inj,
+                         max_recoveries=0)
+    assert rep.failed                              # someone gave up
+    assert len(rep.requests) + len(rep.failed) == len(want)
+    for r in rep.failed:
+        f = r.failure
+        assert f is not None and f.rid == r.rid
+        assert f.reason and f.recovery_attempts == 0   # budget was zero
+        assert f.t_failed_s >= 0.0
+        d = f.to_dict()
+        assert d["rid"] == r.rid and d["reason"] == f.reason
+    for r in rep.requests:                         # unaffected == identical
+        assert r.final_tokens() == want[r.rid], r.rid
+    s = rep.summary()
+    assert s["failed_requests"] == len(rep.failed)
+    assert rep.failures() == [r.failure.to_dict() for r in rep.failed]

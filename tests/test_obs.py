@@ -329,8 +329,11 @@ def test_prefix_load_rejects_corrupted_payload(tmp_path):
     import os
     persist = tmp_path / "tree"
     toks, _ = _build_and_save(tmp_path, persist)
-    target = sorted(f for f in os.listdir(persist) if f.endswith(".bin"))[0]
-    with open(persist / target, "r+b") as f:
+    epoch = PrefixCache.latest_epoch_dir(str(persist))
+    target = os.path.join(
+        epoch, sorted(f for f in os.listdir(epoch)
+                      if f.endswith(".bin"))[0])
+    with open(target, "r+b") as f:
         f.seek(8)
         b = f.read(1)
         f.seek(8)
@@ -351,18 +354,20 @@ def test_prefix_load_rejects_corrupted_payload(tmp_path):
 
 def test_prefix_load_rejects_missing_payload_and_old_version(tmp_path):
     import os
+    from pathlib import Path
     persist = tmp_path / "tree"
     toks, _ = _build_and_save(tmp_path, persist)
+    epoch = Path(PrefixCache.latest_epoch_dir(str(persist)))
     # deleting a payload file -> unreadable/missing -> whole-tree reject
-    target = sorted(f for f in os.listdir(persist) if f.endswith(".bin"))[0]
-    os.unlink(persist / target)
+    target = sorted(f for f in os.listdir(epoch) if f.endswith(".bin"))[0]
+    os.unlink(epoch / target)
     kv2, pc2 = _payload_prefix(tmp_path, "dst")
     res = pc2.load(str(persist))
     assert "rejected" in res and pc2.nodes == 0
     # a pre-checksum (v1) tree is unverifiable -> reject
-    spec = json.loads((persist / "tree.json").read_text())
+    spec = json.loads((epoch / "tree.json").read_text())
     spec["format_version"] = 1
-    (persist / "tree.json").write_text(json.dumps(spec))
+    (epoch / "tree.json").write_text(json.dumps(spec))
     kv3, pc3 = _payload_prefix(tmp_path, "dst2")
     res = pc3.load(str(persist))
     assert "format_version" in res["rejected"]

@@ -1,0 +1,164 @@
+"""Crash-consistent prefix-tree persistence (docs/RELIABILITY.md).
+
+The tree saves into atomic *epochs*: each save writes a complete copy
+under ``.tmp-epoch-NNNNNN/`` and ``os.rename``s it to ``epoch-NNNNNN/``
+(the commit point), keeping the newest two. A loader takes the newest
+epoch that passes the checksum pass-1, falling back to the previous
+consistent one — a crash mid-save (torn tmp dir) or a corrupted newest
+epoch can never poison a restart. The scheduler drives saves online
+every ``prefix_persist_interval_s`` modeled seconds.
+"""
+import os
+import shutil
+
+import numpy as np
+
+from repro.core.engine import M2CacheEngine
+from repro.serving import (ContinuousBatchScheduler, PrefixCache,
+                           requests_from_trace, shared_prefix_trace)
+from repro.serving.kv_cache import TieredKVCache
+
+
+class _Prov:
+    def __init__(self, bt):
+        self.bt = bt
+
+    def _arr(self, tok0):
+        rng = np.random.default_rng(tok0 + 1)
+        return rng.standard_normal((self.bt, 8)).astype(np.float32)
+
+    def export(self, tok0, ntokens, *, scrub=False):
+        return {"k": self._arr(tok0), "v": self._arr(tok0) * -1.0}
+
+    def import_(self, tok0, payload):
+        pass
+
+
+def _payload_prefix(tmp_path, tag):
+    bt, bpt = 4, 256.0
+    kv = TieredKVCache(
+        num_layers=2, d_model=8,
+        hbm_capacity_bytes=64 * bt * bpt,
+        dram_capacity_bytes=64 * bt * bpt,
+        ssd_dir=str(tmp_path / tag / "kv"), block_tokens=bt,
+        bytes_per_token=bpt, store_payloads=True)
+    return kv, PrefixCache(kv)
+
+
+def _build(tmp_path, tag="src"):
+    kv, pc = _payload_prefix(tmp_path, tag)
+    kv.register_provider(0, _Prov(kv.block_tokens))
+    toks = tuple(range(13))                  # 3 whole blocks + 1 tail
+    pc.lock(0, toks)
+    kv.extend(0, len(toks))
+    assert pc.insert(0, toks, prefix_hit=0) == 12
+    pc.release(0)
+    return kv, pc, toks
+
+
+def _epochs(persist):
+    return sorted(d for d in os.listdir(persist) if d.startswith("epoch-"))
+
+
+def test_epoch_rotation_keeps_newest_two(tmp_path):
+    persist = tmp_path / "tree"
+    kv, pc, toks = _build(tmp_path)
+    assert not PrefixCache.has_save(str(persist))
+    s1 = pc.save(str(persist))
+    assert s1["epoch"] == 1
+    assert PrefixCache.has_save(str(persist))
+    assert _epochs(persist) == ["epoch-000001"]
+    s2 = pc.save(str(persist))
+    assert s2["epoch"] == 2
+    assert _epochs(persist) == ["epoch-000001", "epoch-000002"]
+    s3 = pc.save(str(persist))                     # prunes epoch 1
+    assert s3["epoch"] == 3
+    assert _epochs(persist) == ["epoch-000002", "epoch-000003"]
+    # the commit is the rename: no torn tmp dirs survive a save
+    assert not [d for d in os.listdir(persist) if d.startswith(".tmp-")]
+    assert PrefixCache.latest_epoch_dir(str(persist)).endswith("epoch-000003")
+
+
+def test_load_falls_back_to_previous_consistent_epoch(tmp_path):
+    """Corrupting every payload file of the newest epoch models a bad
+    device/torn write after commit: the loader rejects it on the
+    checksum pass and restores the previous epoch instead."""
+    persist = tmp_path / "tree"
+    kv, pc, toks = _build(tmp_path)
+    pc.save(str(persist))
+    pc.save(str(persist))
+    newest = PrefixCache.latest_epoch_dir(str(persist))
+    bins = [f for f in os.listdir(newest) if f.endswith(".bin")]
+    assert bins
+    for f in bins:
+        path = os.path.join(newest, f)
+        raw = bytearray(open(path, "rb").read())
+        raw[len(raw) // 2] ^= 0x40
+        open(path, "wb").write(bytes(raw))
+    kv2, pc2 = _payload_prefix(tmp_path, "dst")
+    res = pc2.load(str(persist))
+    assert "rejected" not in res
+    assert res["nodes"] == 1 and res["payload_blocks"] == 3
+    assert pc2.match(toks).hit_tokens == 12
+    assert pc2.stats()["prefix_load_rejects"] >= 1  # epoch 2 was refused
+
+
+def test_torn_tmp_dir_is_ignored_and_cleaned(tmp_path):
+    """A crash mid-save leaves only a ``.tmp-epoch-*`` dir: it is never
+    loadable (not committed) and the next save sweeps it away."""
+    persist = tmp_path / "tree"
+    kv, pc, toks = _build(tmp_path)
+    pc.save(str(persist))
+    torn = persist / ".tmp-epoch-000002"
+    torn.mkdir()
+    (torn / "tree.json").write_text("{ torn")
+    res = PrefixCache(_payload_prefix(tmp_path, "d1")[0]) \
+        .load(str(persist))
+    assert res["nodes"] == 1                       # epoch 1, not the tmp
+    pc.save(str(persist))
+    assert not [d for d in os.listdir(persist) if d.startswith(".tmp-")]
+
+
+def test_legacy_flat_layout_still_loads(tmp_path):
+    persist = tmp_path / "tree"
+    kv, pc, toks = _build(tmp_path)
+    pc.save(str(persist))
+    epoch = PrefixCache.latest_epoch_dir(str(persist))
+    for f in os.listdir(epoch):                    # flatten to pre-epoch
+        shutil.move(os.path.join(epoch, f), str(persist / f))
+    os.rmdir(epoch)
+    assert PrefixCache.has_save(str(persist))
+    kv2, pc2 = _payload_prefix(tmp_path, "dst")
+    res = pc2.load(str(persist))
+    assert res["nodes"] == 1
+    assert pc2.match(toks).hit_tokens == 12
+
+
+def test_scheduler_periodic_online_saves(tmp_path):
+    """Analytic-engine smoke: with a persist interval set, the run
+    leaves behind a loadable consistent epoch without being told to
+    save at shutdown."""
+    events = shared_prefix_trace(8, rate_rps=1e4, num_groups=2,
+                                 prefix_len=48, reuse_ratio=1.0,
+                                 suffix_len=(4, 8), gen_len=(4, 6),
+                                 seed=0)
+    eng = M2CacheEngine(paper_model="llama-7b", dram_capacity_gb=6.0,
+                        ssd_dir=str(tmp_path / "m2"))
+    persist = tmp_path / "tree"
+    sched = ContinuousBatchScheduler(eng, max_batch=4, prefill_chunk=8,
+                                     prefix_caching=True,
+                                     prefix_persist_dir=str(persist),
+                                     prefix_persist_interval_s=1e-6)
+    rep = sched.run(requests_from_trace(events))
+    assert len(rep.requests) == 8
+    assert sched.prefix_online_saves >= 2          # saved along the way
+    assert rep.prefix_stats["prefix_online_saves"] == sched.prefix_online_saves
+    assert PrefixCache.has_save(str(persist))
+    assert len(_epochs(persist)) <= 2              # rotation bounded it
+    kv2 = TieredKVCache(num_layers=2, d_model=8,
+                        hbm_capacity_bytes=1 << 20,
+                        dram_capacity_bytes=1 << 20,
+                        ssd_dir=str(tmp_path / "kv2"))
+    res = PrefixCache(kv2).load(str(persist))
+    assert "rejected" not in res
+    assert res["nodes"] >= 1
