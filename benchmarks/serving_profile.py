@@ -1,0 +1,230 @@
+"""Profiling benchmark: the conservation ledger must balance for free.
+
+Serves the same shared-prefix real-tiny burst three times through the
+continuous-batching scheduler and holds the profiling subsystem
+(``repro/obs/ledger.py`` / ``profile.py`` / ``health.py``,
+docs/OBSERVABILITY.md) to its contract:
+
+* **bare** — no observability at all: the reference streams;
+* **profiled** — full stack (Chrome trace, metrics + snapshots, time
+  ledger, health monitor). Gates:
+
+  - **tokens byte-identical** and **modeled tok/s ratio exactly 1.0**
+    (attribution never advances the modeled clock);
+  - **conservation** — the ledger's category sums reproduce the run
+    span (time) and the accountant's operational total (gCO2) to
+    residue < 0.1% each;
+  - ``scripts/perf_report.py``'s reconstruction path rebuilds the same
+    ledger from the exported trace file alone, and the span profile
+    yields dispatch groups, hottest requests and a collapsed-stack
+    flamegraph file;
+
+* **chaos** — ``fault_plans/profile_chaos.json`` (a burst of SSD read
+  errors: one lost block -> recovery re-prefill, breaker trip ->
+  quarantine). Gates: the ``ssd_quarantine`` and ``recovery_rate``
+  alert rules fire, the quarantined tier **re-probes and rejoins** on
+  the modeled clock, conservation still holds, and the final streams
+  stay byte-identical to bare.
+
+Emits ``BENCH_profile.json`` plus the profiled run's artifacts
+(``serving_profile.trace.json``, ``.ledger.json``, ``.alerts.jsonl``,
+``.collapsed``) next to it — run artifacts, never committed.
+
+  PYTHONPATH=src python benchmarks/serving_profile.py [--requests 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.core.engine import M2CacheEngine
+from repro.obs import (HealthMonitor, MetricsRegistry, PeriodicSnapshotter,
+                       TimeLedger, TraceRecorder, events_from_chrome,
+                       profile_summary, reconstruct)
+from repro.serving import (ContinuousBatchScheduler, requests_from_trace,
+                           shared_prefix_trace)
+from repro.serving.faults import FaultInjector
+
+PLAN_DIR = pathlib.Path(__file__).resolve().parent / "fault_plans"
+
+
+def build_requests(args, cfg):
+    events = shared_prefix_trace(
+        args.requests, rate_rps=args.rate, num_groups=2,
+        prefix_len=args.prefix_len, reuse_ratio=0.75, turns=2,
+        gen_len=(args.gen_len, args.gen_len + 4),
+        vocab_size=cfg.vocab_size, seed=args.seed)
+    return requests_from_trace(events, vocab_size=cfg.vocab_size,
+                               seed=args.seed)
+
+
+def run_serving(name, args, cfg, params, *, obs_dir=None, faults=None):
+    eng = M2CacheEngine(cfg=cfg, params=params,
+                        dram_capacity_gb=args.dram_gb,
+                        batched_decode=True, prefill_bucket=8,
+                        seed=args.seed)
+    recorder = metrics = snap = ledger = health = None
+    if obs_dir is not None:
+        recorder = TraceRecorder()
+        metrics = MetricsRegistry()
+        snap = PeriodicSnapshotter(
+            metrics, str(obs_dir / f"serving_profile.{name}.metrics.jsonl"),
+            interval_s=1.0)
+        ledger = TimeLedger()
+        health = HealthMonitor(metrics)
+    sched = ContinuousBatchScheduler(
+        eng, max_batch=args.max_batch, hbm_kv_gb=args.hbm_kv_gb,
+        dram_kv_gb=args.dram_kv_gb, prefill_chunk=args.prefill_chunk,
+        prefix_caching=True, trace=recorder, metrics=metrics,
+        snapshotter=snap, ledger=ledger, health=health, faults=faults)
+    rep = sched.run(build_requests(args, cfg))
+    s = rep.summary()
+    row = {
+        "tokens_per_s": s["tokens_per_s"],
+        "modeled_span_s": rep.modeled_span_s,
+        "decode_steps": rep.decode_steps,
+        "preemptions": rep.preemptions,
+        "recoveries": rep.recoveries,
+        "gco2_oce_g": rep.carbon["oce_g"],
+        "kv_ssd_rejoins": rep.kv_stats.get("kv_ssd_rejoins", 0),
+        "kv_ssd_probes": rep.kv_stats.get("kv_ssd_probes", 0),
+        "tokens": {r.rid: list(r.session.tokens) for r in rep.requests},
+    }
+    if obs_dir is not None:
+        trace_path = obs_dir / f"serving_profile.{name}.trace.json"
+        recorder.export_chrome(str(trace_path))
+        snap.close(eng.clock)
+        ledger.export(str(obs_dir / f"serving_profile.{name}.ledger.json"))
+        health.export_jsonl(
+            str(obs_dir / f"serving_profile.{name}.alerts.jsonl"))
+        row["trace_path"] = str(trace_path)
+        row["ledger_summary"] = ledger.summary()
+        row["alerts"] = health.counts()
+        row["_ledger"] = ledger
+        row["_health"] = health
+    print(f"{name:9s} tok/s={row['tokens_per_s']:9.1f} "
+          f"span={row['modeled_span_s']:.3f}s "
+          f"preempt={row['preemptions']} recover={row['recoveries']} "
+          f"rejoin={row['kv_ssd_rejoins']}")
+    return row
+
+
+def ledger_checks(prefix, row):
+    led = row["_ledger"]
+    res = led.residues()
+    return {
+        f"{prefix}time_conserved": not led.check()
+        and res["time_residue_frac"] < led.tolerance,
+        f"{prefix}gco2_conserved":
+            res["gco2_residue_frac"] < led.tolerance,
+        f"{prefix}time_residue_frac": res["time_residue_frac"],
+        f"{prefix}gco2_residue_frac": res["gco2_residue_frac"],
+    }
+
+
+def profile_checks(row, out_dir):
+    """The perf_report path: reconstruct ledger + profile from the
+    exported trace file alone and compare with the live objects."""
+    with open(row["trace_path"]) as f:
+        events = events_from_chrome(json.load(f))
+    led = row["_ledger"]
+    rec = reconstruct(events)
+    collapsed = out_dir / "serving_profile.collapsed"
+    prof = profile_summary(events, top=5, collapsed_path=str(collapsed))
+    groups = prof["dispatch_groups"]
+    return {
+        "ledger_reconstructs":
+            not rec.check()
+            and abs(rec.time_total() - led.time_total()) <= 1e-9
+            and abs(rec.gco2_total() - led.gco2_total()) <= 1e-12,
+        "ledger_matches_report":
+            abs(led.span_s - row["modeled_span_s"]) <= 1e-9
+            and abs(led.gco2_total_g - row["gco2_oce_g"]) <= 1e-12,
+        "profile_has_dispatch_groups":
+            any(k.startswith("prefill/") for k in groups)
+            and any(k.startswith("decode/") for k in groups),
+        "profile_has_hottest_requests":
+            len(prof["hottest_requests"]) > 0,
+        "collapsed_stack_written": prof["collapsed_lines"] > 0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=1e4,
+                    help="effectively-simultaneous arrivals: KV pressure "
+                         "peaks, so the ledger sees every category")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prefix-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--dram-gb", type=float, default=0.5)
+    ap.add_argument("--hbm-kv-gb", type=float, default=1.1e-4,
+                    help="tight KV budget -> preemption + tier traffic "
+                         "-> nonzero kv_stall ledger family")
+    ap.add_argument("--dram-kv-gb", type=float, default=5e-5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_profile.json "
+                         "next to this script)")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config(args.arch, tiny=True)
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg,
+                           dtype=jnp.float32, m2=True)
+
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parent / "BENCH_profile.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+
+    rows = {
+        "bare": run_serving("bare", args, cfg, params),
+        "profiled": run_serving("profiled", args, cfg, params,
+                                obs_dir=out.parent),
+        "chaos": run_serving(
+            "chaos", args, cfg, params, obs_dir=out.parent,
+            faults=FaultInjector.from_plan(
+                str(PLAN_DIR / "profile_chaos.json"))),
+    }
+    bare, prof, chaos = rows["bare"], rows["profiled"], rows["chaos"]
+    ratio = prof["tokens_per_s"] / max(bare["tokens_per_s"], 1e-12)
+    ch = chaos["_health"]
+    checks = {
+        "tokens_identical": bare["tokens"] == prof["tokens"],
+        "tokens_per_s_ratio": ratio,
+        # attribution reads the clock, never advances it: exactly 1.0
+        "overhead_exact": abs(ratio - 1.0) <= 1e-9,
+        **ledger_checks("", prof),
+        **profile_checks(prof, out.parent),
+        # chaos: alerts fire, the quarantined tier rejoins, and the
+        # ledger still balances under faults + recovery re-prefill
+        "chaos_breaker_alert": ch.fired("ssd_quarantine"),
+        "chaos_recovery_alert": ch.fired("recovery_rate"),
+        "chaos_rejoined": chaos["kv_ssd_rejoins"] > 0,
+        "chaos_recovered": chaos["recoveries"] > 0,
+        "chaos_tokens_identical": bare["tokens"] == chaos["tokens"],
+        **ledger_checks("chaos_", chaos),
+    }
+    for k, v in checks.items():
+        flag = "" if bool(v) else "  <-- EXPECTED TO HOLD"
+        print(f"  {k}: {v}{flag}")
+
+    for row in rows.values():                # keep the artifact small
+        row.pop("tokens")
+        row.pop("trace_path", None)
+        row.pop("_ledger", None)
+        row.pop("_health", None)
+    payload = {"config": vars(args), "systems": rows, "checks": checks}
+    out.write_text(json.dumps(payload, indent=1, default=float))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

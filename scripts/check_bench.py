@@ -64,6 +64,8 @@ SMOKE_RUNS = {
                              "--requests", "6"],
     "BENCH_faults.json": ["benchmarks/serving_faults.py",
                           "--requests", "8"],
+    "BENCH_profile.json": ["benchmarks/serving_profile.py",
+                           "--requests", "8"],
 }
 
 #: per-artifact regression metrics: (name, dotted path [or "a/b" ratio],
@@ -127,6 +129,17 @@ METRICS = {
          "higher"),
         ("dma_faults_injected", "checks.dma_faults_injected", "higher"),
         ("chaos_tok_s", "systems.chaos.tokens_per_s", "higher"),
+    ],
+    "BENCH_profile.json": [
+        # conservation itself is enforced by the boolean checks
+        # (time_conserved / gco2_conserved / overhead_exact); these
+        # band the committed magnitudes of the profiling gate
+        ("profile_tokens_per_s_ratio", "checks.tokens_per_s_ratio",
+         "higher"),
+        ("profiled_tok_s", "systems.profiled.tokens_per_s", "higher"),
+        ("chaos_rejoins", "systems.chaos.kv_ssd_rejoins", "higher"),
+        ("chaos_profile_recoveries", "systems.chaos.recoveries",
+         "higher"),
     ],
 }
 

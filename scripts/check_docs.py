@@ -76,7 +76,10 @@ def main():
                 f"docs/OBSERVABILITY.md does not mention {mod.name}")
     for topic in ("modeled clock", "Perfetto", "kv-block-trace",
                   "trace_report.py", "event taxonomy",
-                  "carbon attribution", "overhead", "precision"):
+                  "carbon attribution", "overhead", "precision",
+                  "conservation contract", "perf_report.py",
+                  "flamegraph", "collapsed-stack", "dispatch group",
+                  "alert", "firing", "resolved"):
         if topic.lower() not in obs_doc.lower():
             errors.append(
                 f"docs/OBSERVABILITY.md does not document {topic!r} "
@@ -92,7 +95,7 @@ def main():
     for topic in ("fault point", "circuit breaker", "retry", "checksum",
                   "quarantine", "recovery", "crash", "epoch",
                   "fault plan", "RequestFailure", "max_recoveries",
-                  "what is not survived"):
+                  "what is not survived", "re-probe", "rejoin"):
         if topic.lower() not in rel_doc.lower():
             errors.append(
                 f"docs/RELIABILITY.md does not document {topic!r} "

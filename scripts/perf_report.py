@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Rebuild the conservation ledger, span profile and alert history from
+a Chrome trace written by ``--trace-out`` — no access to the run's
+``ServingReport`` needed.
+
+Three sections, each reconstructed purely from the trace file:
+
+* **ledger** — the modeled-time + gCO2 attribution streamed as
+  cumulative ``ledger`` counter samples (the last sample per series
+  wins, so ring-truncated traces still reconstruct exactly), with the
+  conservation residues re-checked offline;
+* **profile** — the hierarchical self/total span tree rolled into
+  per-track totals, per-dispatch-group cost breakdowns (kernel-launch
+  vs HBM weight-read vs compute vs weight stall) and the top-N hottest
+  requests; ``--collapsed PATH`` additionally writes the
+  flamegraph collapsed-stack file (speedscope / inferno format);
+* **alerts** — the health engine's firing/resolved transitions replayed
+  from the ``health`` instants.
+
+``--summary report.json`` cross-checks the reconstruction against a
+server output JSON (``summary.modeled_span_s`` vs the ledger span,
+``carbon_g.oce_g`` vs the ledger's operational total). Usage::
+
+    PYTHONPATH=src python scripts/perf_report.py run.trace.json \
+        [--json] [--collapsed run.collapsed] [--summary out.json] [--top 5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import (alerts_from_events, events_from_chrome,  # noqa: E402
+                       profile_summary, reconstruct)
+
+REL_TOL = 1e-6     # cross-check tolerance vs the report's own numbers
+
+
+def _close(a: float, b: float, tol: float = REL_TOL) -> bool:
+    return abs(a - b) <= tol * max(abs(a), abs(b), 1e-12)
+
+
+def cross_check(ledger, summary_path: str) -> dict:
+    """Reconstruction vs the server's own output JSON."""
+    with open(summary_path) as f:
+        doc = json.load(f)
+    out = {"summary": summary_path, "checks": {}}
+    span = doc.get("summary", {}).get("modeled_span_s")
+    if span is not None and ledger.span_s is not None:
+        out["checks"]["span_matches"] = _close(span, ledger.span_s)
+        out["span_s"] = {"report": span, "ledger": ledger.span_s}
+    oce = doc.get("carbon_g", {}).get("oce_g")
+    if oce is not None and ledger.gco2_total_g is not None:
+        out["checks"]["gco2_matches"] = _close(oce, ledger.gco2_total_g)
+        out["gco2_g"] = {"report": oce, "ledger": ledger.gco2_total_g}
+    out["ok"] = all(out["checks"].values()) if out["checks"] else False
+    return out
+
+
+def report(path: str, *, top: int = 10, collapsed: str = None,
+           summary: str = None) -> dict:
+    with open(path) as f:
+        events = events_from_chrome(json.load(f))
+    ledger = reconstruct(events)
+    alerts = alerts_from_events(events)
+    out = {
+        "trace": path,
+        "events": len(events),
+        "ledger": ledger.summary(),
+        "profile": profile_summary(events, top=top,
+                                   collapsed_path=collapsed),
+        "alerts": alerts,
+    }
+    if summary:
+        out["cross_check"] = cross_check(ledger, summary)
+    return out
+
+
+def print_report(rep: dict):
+    led = rep["ledger"]
+    print(f"{rep['trace']}: {rep['events']} events")
+    print("\ntime ledger (modeled seconds by family):")
+    for fam, v in sorted(led["time_by_family_s"].items(),
+                         key=lambda kv: -kv[1]):
+        frac = v / led["horizon_s"] if led.get("horizon_s") else 0.0
+        print(f"  {fam:>20}: {v:>10.4f}s  ({100 * frac:5.1f}%)")
+    res = led["residues"]
+    print(f"  {'residue':>20}: {res['time_residue_s']:>10.2e}s  "
+          f"({100 * res['time_residue_frac']:.4f}% of horizon)  "
+          f"conserved={led['conserved']}")
+    if led.get("gco2_total_g") is not None:
+        print(f"\ngCO2 ledger: {led['gco2_total_g']:.5f} g operational "
+              f"(+{led['embodied_g']:.5f} g embodied), residue "
+              f"{res['gco2_residue_g']:.2e} g "
+              f"({100 * res['gco2_residue_frac']:.4f}%)")
+    prof = rep["profile"]
+    if prof["dispatch_groups"]:
+        print("\ndispatch groups:")
+        print(f"  {'group':>14} {'n':>6} {'total':>9} {'compute':>9} "
+              f"{'hbm_read':>9} {'launch':>9} {'stall':>9}")
+        for key, g in sorted(prof["dispatch_groups"].items()):
+            print(f"  {key:>14} {g['dispatches']:>6} "
+                  f"{g['total_s']:>9.4f} {g['compute_s']:>9.4f} "
+                  f"{g['hbm_read_s']:>9.4f} {g['kernel_launch_s']:>9.4f} "
+                  f"{g['weight_stall_s']:>9.4f}")
+    if prof["hottest_requests"]:
+        print("\nhottest requests (busy modeled seconds):")
+        for r in prof["hottest_requests"]:
+            print(f"  req {r['rid']:>4}: busy {r['busy_s']:.4f}s  "
+                  f"queued {r['queued_s']:.4f}s  "
+                  f"parked {r['parked_s']:.4f}s")
+    if "collapsed_lines" in prof:
+        print(f"\ncollapsed-stack profile: {prof['collapsed_lines']} "
+              "frames written")
+    if rep["alerts"]:
+        print("\nalerts:")
+        for a in rep["alerts"]:
+            print(f"  t={a['t']:>9.3f}s  {a.get('state', '?'):>8}  "
+                  f"{a['rule']}  (value={a.get('value', float('nan')):.4g})")
+    if "cross_check" in rep:
+        cc = rep["cross_check"]
+        print(f"\ncross-check vs {cc['summary']}: "
+              f"{'OK' if cc['ok'] else 'MISMATCH'} {cc['checks']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace JSON from --trace-out")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON instead of tables")
+    ap.add_argument("--collapsed", default=None, metavar="PATH",
+                    help="also write the flamegraph collapsed-stack file")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="server output JSON to cross-check the "
+                         "reconstruction against")
+    ap.add_argument("--top", type=int, default=10,
+                    help="hottest requests to list")
+    args = ap.parse_args()
+    rep = report(args.trace, top=args.top, collapsed=args.collapsed,
+                 summary=args.summary)
+    if args.json:
+        print(json.dumps(rep, indent=1, default=float))
+    else:
+        print_report(rep)
+    if args.summary and not rep["cross_check"]["ok"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ even though this container has no GPU.
 from __future__ import annotations
 
 import dataclasses
-from collections import Counter
+from collections import Counter, deque
 from typing import Dict, Optional, Sequence
 
 
@@ -38,6 +38,10 @@ class TokenReport:
     bytes_hbm: float
     bytes_ssd: int
     hbm_hit_ratio: float
+    # cost-term decomposition for the span profiler (defaulted so older
+    # call sites constructing TokenReport directly stay valid)
+    hbm_read_s: float = 0.0       # HBM weight-read stream time
+    kernel_launch_s: float = 0.0  # per-layer dispatch launch overhead
 
 
 class MultiLevelCacheManager:
@@ -66,6 +70,9 @@ class MultiLevelCacheManager:
                                    miss_frac=ssd_miss_frac,
                                    prefetch=prefetch)
         self.layer_flops = layer_flops
+        # per-process_token dispatch cost records for the span profiler /
+        # time ledger (bounded; the serving scheduler drains it per step)
+        self.dispatch_log: deque = deque(maxlen=4096)
         self.clock = 0.0
         if not use_ssd:
             # whole model pinned in DRAM (paper ablation "+LRU Cache" stage)
@@ -94,6 +101,7 @@ class MultiLevelCacheManager:
         SSD preloads) is paid once — the continuous-batching amortisation.
         """
         t_compute = t_hbm = t_stall = 0.0
+        t_read = t_launch = 0.0
         bytes_hbm = 0.0
         ssd_before = self.ssd.bytes_read
         clock_before = self.clock
@@ -121,16 +129,30 @@ class MultiLevelCacheManager:
             t_compute += comp_s
             t_hbm += load_s
             t_stall += stall
+            t_read += read_s
+            t_launch += self.hw.kernel_launch_s
             bytes_hbm += s.bytes_loaded
         total = self.hbm.total
         denom = total.loaded + total.hit
+        self.dispatch_log.append({
+            "t0": clock_before, "t1": self.clock, "batch": batch_size,
+            "compute_s": t_compute, "hbm_load_s": t_hbm,
+            "hbm_read_s": t_read, "kernel_launch_s": t_launch,
+            "stall_s": t_stall})
         return TokenReport(
             modeled_s=self.clock - clock_before,
             compute_s=t_compute, hbm_load_s=t_hbm, ssd_stall_s=t_stall,
             bytes_hbm=bytes_hbm,
             bytes_ssd=int((self.ssd.bytes_read - ssd_before)
                           * self.preloader.byte_scale),
-            hbm_hit_ratio=(total.hit / denom if denom else 0.0))
+            hbm_hit_ratio=(total.hit / denom if denom else 0.0),
+            hbm_read_s=t_read, kernel_launch_s=t_launch)
+
+    def drain_dispatch_log(self) -> list:
+        """Pop and return the accumulated dispatch cost records."""
+        out = list(self.dispatch_log)
+        self.dispatch_log.clear()
+        return out
 
 
 def zero_infinity_token_time(*, num_layers: int, layer_bytes_fp16: float,

@@ -43,6 +43,10 @@ class PrefetchStats:
     hits: int = 0                 # waits that found it already complete
     dma_stalls: int = 0           # injected channel stalls (faults)
     dma_failures: int = 0         # injected transfer failures (faults)
+    retransfer_s: float = 0.0     # synchronous redo time after in-flight
+    #                               failures (subset of stall_s — lets the
+    #                               ledger carve DMA retransfer out of the
+    #                               stall category it is billed inside)
 
 
 class PrefetchEngine:
@@ -155,6 +159,7 @@ class PrefetchEngine:
             self._failed.discard(key)
             stall = nbytes / self._bw.get(channel, float("inf"))
             self.stats.stall_s += stall
+            self.stats.retransfer_s += stall
             self.stats.stalled_bytes += nbytes
             if self._recorder is not None:
                 self._recorder.span(f"dma:{channel}", "retransfer", now,

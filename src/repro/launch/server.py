@@ -230,8 +230,24 @@ def main():
     ap.add_argument("--block-trace-out", default=None, metavar="PATH",
                     help="write the KV block-access trace (JSONL replay "
                          "format for the replacement-policy simulator)")
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="write the modeled-time + gCO2 conservation "
+                         "ledger (*.ledger.json): every modeled second "
+                         "and every operational gram attributed to one "
+                         "exclusive category, with conservation residues "
+                         "(docs/OBSERVABILITY.md)")
+    ap.add_argument("--health-out", default=None, metavar="PATH",
+                    help="evaluate serving health alert rules on the "
+                         "modeled clock and write the alert transitions "
+                         "as JSONL (*.alerts.jsonl)")
+    ap.add_argument("--alert-rules", default=None, metavar="PATH",
+                    help="JSON alert-rule file for --health-out "
+                         "(default: the built-in serving rule set; "
+                         "schema in docs/OBSERVABILITY.md)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.alert_rules and not args.health_out:
+        ap.error("--alert-rules requires --health-out")
     if not args.prefix_cache and (args.prefix_carbon_aware
                                   or args.prefix_capacity != 65536
                                   or args.prefix_persist):
@@ -260,6 +276,18 @@ def main():
     if args.block_trace_out:
         from repro.obs import BlockTraceCollector
         block_trace = BlockTraceCollector()
+    ledger = health = None
+    if args.ledger:
+        from repro.obs import TimeLedger
+        ledger = TimeLedger()
+    if args.health_out:
+        from repro.obs import HealthMonitor, MetricsRegistry, load_rules
+        if metrics is None:
+            # rules read live metrics; a private registry serves when no
+            # --metrics-out asked for exported ones
+            metrics = MetricsRegistry()
+        rules = load_rules(args.alert_rules) if args.alert_rules else None
+        health = HealthMonitor(metrics, rules)
     injector = None
     if args.fault_plan:
         from repro.serving.faults import FaultInjector
@@ -281,6 +309,7 @@ def main():
                                      trace=recorder, metrics=metrics,
                                      block_trace=block_trace,
                                      snapshotter=snapshotter,
+                                     ledger=ledger, health=health,
                                      faults=injector,
                                      max_recoveries=args.max_recoveries,
                                      prefix_persist_dir=args.prefix_persist,
@@ -298,7 +327,7 @@ def main():
     if recorder is not None:
         recorder.export_chrome(args.trace_out)
         obs.update(recorder.stats())
-    if metrics is not None:
+    if args.metrics_out:
         snapshotter.close(eng.clock)
         metrics.export_prometheus(args.metrics_out)
     if block_trace is not None:
@@ -314,6 +343,16 @@ def main():
     }
     if obs:
         out["obs"] = obs
+    if ledger is not None:
+        ledger.export(args.ledger)
+        out["ledger"] = {"residues": ledger.residues(),
+                         "conserved": not ledger.check(),
+                         "time_by_family_s": ledger.by_family()}
+    if health is not None:
+        health.export_jsonl(args.health_out)
+        out["health"] = {"alerts": len(health.alerts),
+                         "counts": health.counts(),
+                         "active": health.active()}
     if injector is not None:
         out["faults"] = injector.stats()
         out["failures"] = rep.failures()

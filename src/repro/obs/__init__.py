@@ -1,4 +1,4 @@
-"""Observability layer: tracing, metrics and block-access traces.
+"""Observability layer: tracing, metrics, block traces, attribution.
 
 ``TraceRecorder`` (``obs/trace.py``) records spans / instants /
 counters on the modeled clock with Chrome ``trace_event`` export;
@@ -6,17 +6,33 @@ counters on the modeled clock with Chrome ``trace_event`` export;
 histograms with JSON snapshots and a Prometheus-text exporter;
 ``BlockTraceCollector`` (``obs/block_trace.py``) captures every KV
 block tier transition in the replay format the replacement-policy lab
-consumes. All of it is opt-in and free on the modeled clock — see
-``docs/OBSERVABILITY.md``.
+consumes; ``TimeLedger`` (``obs/ledger.py``) attributes every modeled
+second and gCO2 gram into exclusive categories under a conservation
+invariant; the span profiler (``obs/profile.py``) rolls traces into
+self/total flamegraph trees; ``HealthMonitor`` (``obs/health.py``)
+evaluates alert rules on modeled-clock metric snapshots. All of it is
+opt-in and free on the modeled clock — see ``docs/OBSERVABILITY.md``.
 """
 from repro.obs.block_trace import (BlockAccessEvent, BlockTraceCollector,
                                    read_block_trace)
+from repro.obs.health import (AlertRule, HealthMonitor, alerts_from_events,
+                              default_rules, load_rules)
+from repro.obs.ledger import TimeLedger, reconstruct
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                PeriodicSnapshotter)
+from repro.obs.profile import (build_tree, collapsed_stacks,
+                               dispatch_groups, events_from_chrome,
+                               events_from_recorder, hottest_requests,
+                               profile_summary, write_collapsed)
 from repro.obs.trace import TraceEvent, TraceRecorder
 
 __all__ = [
-    "BlockAccessEvent", "BlockTraceCollector", "Counter", "Gauge",
-    "Histogram", "MetricsRegistry", "PeriodicSnapshotter", "TraceEvent",
-    "TraceRecorder", "read_block_trace",
+    "AlertRule", "BlockAccessEvent", "BlockTraceCollector", "Counter",
+    "Gauge", "HealthMonitor", "Histogram", "MetricsRegistry",
+    "PeriodicSnapshotter", "TimeLedger", "TraceEvent", "TraceRecorder",
+    "alerts_from_events", "build_tree", "collapsed_stacks",
+    "default_rules", "dispatch_groups", "events_from_chrome",
+    "events_from_recorder", "hottest_requests", "load_rules",
+    "profile_summary", "read_block_trace", "reconstruct",
+    "write_collapsed",
 ]

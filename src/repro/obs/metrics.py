@@ -133,6 +133,11 @@ class MetricsRegistry:
                   buckets: Sequence[float] = DEFAULT_BUCKETS) -> Histogram:
         return self._get(Histogram, name, help_, buckets=buckets)
 
+    def get(self, name: str):
+        """Registered metric by name (None when absent) — the health
+        engine's read-only lookup."""
+        return self._metrics.get(name)
+
     # -- export --------------------------------------------------------
     def snapshot(self, now: Optional[float] = None) -> Dict[str, Any]:
         """Plain-dict snapshot (JSON-serialisable)."""
@@ -188,8 +193,11 @@ class PeriodicSnapshotter:
 
     Drive with ``tick(now)`` from the serving loop; emits all snapshots
     due since the last tick (at most one per interval boundary — long
-    idle jumps produce one snapshot, not thousands). ``close()`` writes
-    a final snapshot so short runs still produce output.
+    idle jumps produce one snapshot, not thousands; the coalesced
+    boundaries are counted in ``dropped`` and the
+    ``obs_snapshot_dropped_total`` counter so the loss is never silent).
+    ``close()`` writes a final snapshot so short runs still produce
+    output.
     """
 
     def __init__(self, registry: MetricsRegistry, path,
@@ -201,6 +209,10 @@ class PeriodicSnapshotter:
         self.interval_s = float(interval_s)
         self._next_due: Optional[float] = None
         self.snapshots = 0
+        self.dropped = 0
+        self._drop_counter = registry.counter(
+            "obs_snapshot_dropped_total",
+            "snapshot interval boundaries coalesced by idle jumps")
         self._f = open(self.path, "w")
 
     def tick(self, now: float):
@@ -208,6 +220,10 @@ class PeriodicSnapshotter:
             self._next_due = now + self.interval_s
             return
         if now >= self._next_due:
+            missed = int((now - self._next_due) // self.interval_s)
+            if missed:
+                self.dropped += missed
+                self._drop_counter.inc(missed)
             self._write(now)
             self._next_due = now + self.interval_s
 

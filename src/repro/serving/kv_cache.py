@@ -170,7 +170,9 @@ class TieredKVCache:
                  faults=None,
                  ssd_retry_limit: int = 2,
                  ssd_retry_backoff_s: float = 2e-3,
-                 ssd_breaker_threshold: int = 3):
+                 ssd_breaker_threshold: int = 3,
+                 ssd_probe_cooldown_s: float = 0.5,
+                 ssd_probe_cooldown_max_s: float = 8.0):
         self.hw = hw
         # per-tier storage precision (fp16 everywhere by default —
         # byte-identical paging); any quantized tier flips self.quantized
@@ -251,6 +253,18 @@ class TieredKVCache:
         self.ssd_breaker_threshold = int(ssd_breaker_threshold)
         self.ssd_quarantined = False
         self._ssd_consec_failures = 0
+        # quarantine re-probe: after a cooldown on the modeled clock the
+        # tier is probed once; success rejoins it, failure doubles the
+        # cooldown (bounded). Needs a clock (set_clock / attach_obs) —
+        # without one the tier stays quarantined, the pre-probe behavior.
+        self.ssd_probe_cooldown_s = float(ssd_probe_cooldown_s)
+        self.ssd_probe_cooldown_max_s = float(ssd_probe_cooldown_max_s)
+        self._kv_clock = None            # () -> raw modeled seconds
+        self._probe_cooldown = self.ssd_probe_cooldown_s
+        self._next_probe_at: Optional[float] = None
+        self.ssd_probes = 0
+        self.ssd_probe_failures = 0
+        self.ssd_rejoins = 0
         self.ssd_read_retries = 0
         self.ssd_write_retries = 0
         self.ssd_write_aborts = 0        # spills aborted (victim kept in DRAM)
@@ -265,6 +279,12 @@ class TieredKVCache:
 
     # ------------------------------------------------------------------
     # observability: every tier transition as a block-access event
+
+    def set_clock(self, clock):
+        """Give the cache a raw modeled-clock reader (the scheduler's
+        engine clock). Only consulted for quarantine re-probe timing —
+        never to advance anything."""
+        self._kv_clock = clock
 
     def attach_obs(self, *, trace=None, block_trace=None, clock=None):
         """Attach a :class:`~repro.obs.TraceRecorder` (Chrome-trace ``kv``
@@ -357,6 +377,11 @@ class TieredKVCache:
             # degrade to DRAM-only paging (spills stop; blocks already
             # on flash stay readable so nothing is stranded)
             self.ssd_quarantined = True
+            # arm the re-probe schedule (fresh cooldown per quarantine)
+            self._probe_cooldown = self.ssd_probe_cooldown_s
+            now = self._now()
+            self._next_probe_at = (now + self._probe_cooldown
+                                   if now is not None else None)
             if self._obs_trace is not None:
                 t = self._obs_clock() if self._obs_clock else 0.0
                 self._obs_trace.instant(
@@ -365,6 +390,52 @@ class TieredKVCache:
 
     def _note_ssd_success(self):
         self._ssd_consec_failures = 0
+
+    def _now(self) -> Optional[float]:
+        if self._kv_clock is not None:
+            return self._kv_clock()
+        if self._obs_clock is not None:
+            return self._obs_clock()
+        return None
+
+    def _ssd_usable(self) -> bool:
+        """True when spills may use the flash tier: not quarantined, or
+        quarantined but a cooldown-gated probe just succeeded."""
+        return not self.ssd_quarantined or self._maybe_reprobe()
+
+    def _maybe_reprobe(self) -> bool:
+        """Bounded background re-probe of a quarantined flash tier on
+        the modeled clock. At most one probe per cooldown window; a
+        failed probe doubles the cooldown (capped), a successful one
+        rejoins the tier and resets the breaker. Returns True iff the
+        tier rejoined. Probes are control-plane: they never advance the
+        modeled clock and never touch data blocks."""
+        now = self._now()
+        if now is None or self._next_probe_at is None \
+                or now < self._next_probe_at:
+            return False
+        self.ssd_probes += 1
+        fired = self.faults is not None and self.faults.fire(
+            "ssd.write", detail={"probe": True}) is not None
+        if fired:
+            self.ssd_probe_failures += 1
+            self._probe_cooldown = min(self._probe_cooldown * 2.0,
+                                       self.ssd_probe_cooldown_max_s)
+            self._next_probe_at = now + self._probe_cooldown
+            if self._obs_trace is not None:
+                self._obs_trace.instant(
+                    "kv", "ssd_probe_failed", now,
+                    cooldown_s=self._probe_cooldown)
+            return False
+        self.ssd_quarantined = False
+        self._ssd_consec_failures = 0
+        self._next_probe_at = None
+        self._probe_cooldown = self.ssd_probe_cooldown_s
+        self.ssd_rejoins += 1
+        if self._obs_trace is not None:
+            self._obs_trace.instant("kv", "ssd_rejoin", now,
+                                    probes=self.ssd_probes)
+        return True
 
     def _ssd_write(self, blk: KVBlock, banks: dict):
         """Write a block's stored form to flash with bounded
@@ -604,7 +675,7 @@ class TieredKVCache:
         and the NVMe leg of the transfer clock — carry the packed form."""
         dt = 0.0
         while self.dram.used_bytes + need_bytes > self.dram.capacity \
-                and self.dram.dynamic and not self.ssd_quarantined:
+                and self.dram.dynamic and self._ssd_usable():
             bid = next(iter(self.dram.dynamic))
             blk = self.blocks[bid]
             payload = self.dram.dynamic[bid]
@@ -1066,4 +1137,7 @@ class TieredKVCache:
             "kv_provider_faults": self.provider_faults,
             "kv_prefetch_skips": self.prefetch_skips,
             "kv_dram_overcommit_bytes": self.dram_overcommit_max,
+            "kv_ssd_probes": self.ssd_probes,
+            "kv_ssd_probe_failures": self.ssd_probe_failures,
+            "kv_ssd_rejoins": self.ssd_rejoins,
         }

@@ -290,7 +290,7 @@ class ContinuousBatchScheduler:
                  prefix_capacity_tokens: int = 65536,
                  prefix_carbon_aware: bool = False,
                  trace=None, metrics=None, block_trace=None,
-                 snapshotter=None,
+                 snapshotter=None, ledger=None, health=None,
                  faults=None, max_recoveries: int = 2,
                  prefix_persist_dir: Optional[str] = None,
                  prefix_persist_interval_s: Optional[float] = None):
@@ -351,8 +351,20 @@ class ContinuousBatchScheduler:
         self.metrics = metrics
         self.block_trace = block_trace
         self.snapshotter = snapshotter
+        # ``ledger`` (a repro.obs.TimeLedger) attributes every modeled
+        # second + gCO2 gram of run() into exclusive categories under a
+        # conservation invariant; ``health`` (a repro.obs.HealthMonitor)
+        # evaluates alert rules once per iteration on the modeled clock.
+        # Both are passive: billing reads clock deltas, never makes them.
+        self.ledger = ledger
+        self.health = health
+        self._iter_bill: Optional[Dict[str, float]] = None
+        self._trace_drops_seen = 0
         self._phase_spans: Dict[int, object] = {}  # rid -> open span id
         clk = lambda: self.engine.clock
+        # quarantine re-probe timing (kv_cache._maybe_reprobe) runs on
+        # the same modeled clock; harmless without faults
+        self.kv.set_clock(clk)
         if trace is not None:
             trace.set_default_clock(clk)
             pf = getattr(engine, "prefetch", None)
@@ -395,6 +407,22 @@ class ContinuousBatchScheduler:
                 "failed": metrics.counter(
                     "serving_faults_failed_requests_total",
                     "requests failed after exhausting recoveries"),
+                # health-engine feeds (docs/OBSERVABILITY.md)
+                "slo_violations": metrics.counter(
+                    "serving_slo_violations_total",
+                    "finished requests that missed their SLO"),
+                "ssd_quarantined": metrics.gauge(
+                    "kv_ssd_quarantined",
+                    "1 while the SSD circuit breaker is tripped"),
+                "dram_overcommit": metrics.gauge(
+                    "kv_dram_overcommit_bytes",
+                    "DRAM KV bytes beyond capacity (degraded paging)"),
+                "prefix_hit_rate": metrics.gauge(
+                    "serving_prefix_hit_rate",
+                    "lifetime prefix-cache token hit rate"),
+                "trace_drops": metrics.counter(
+                    "obs_trace_dropped_events_total",
+                    "trace events evicted by ring overflow"),
             }
         if faults is not None:
             faults.attach_obs(trace=trace, metrics=metrics)
@@ -417,6 +445,83 @@ class ContinuousBatchScheduler:
         weights = eng.manager.dram.used_bytes if eng.manager else \
             eng.num_layers * eng._layer_bytes_fp16()
         return (weights + self.kv.dram.used_bytes) / 2**30
+
+    # -- time-ledger billing (docs/OBSERVABILITY.md) -------------------
+    # Every clock advance in run() is billed to exactly one exclusive
+    # ledger category from the *measured* clock delta, so the category
+    # sums reproduce the span by construction and any future
+    # instrumentation gap shows up as conservation residue.
+
+    def _retrans_s(self) -> float:
+        pf = getattr(self.engine, "prefetch", None)
+        return pf.stats.retransfer_s if pf is not None else 0.0
+
+    def _bill_time(self, cat: str, dt: float):
+        if self.ledger is None or dt <= 0.0:
+            return
+        self.ledger.bill(cat, dt)
+        if self._iter_bill is not None:
+            self._iter_bill[cat] = self._iter_bill.get(cat, 0.0) + dt
+
+    def _bill_region(self, cat: str, t0: float, r0: float):
+        """Bill the clock delta since ``t0`` to ``cat``, carving out any
+        synchronous DMA retransfer (retransfer_s delta since ``r0``)
+        that happened inside the region."""
+        if self.ledger is None:
+            return
+        dt = self.engine.clock - t0
+        rt = min(max(self._retrans_s() - r0, 0.0), dt)
+        self._bill_time("dma_retransfer", rt)
+        self._bill_time(cat, dt - rt)
+
+    def _bill_step(self, phase: str, step_dt: float, retrans_s: float,
+                   stall_s: float, disp: list, fallback_batch: int,
+                   recovery_frac: float = 0.0):
+        """Decompose one engine step's clock delta: DMA retransfer,
+        weight-stream stall, recovery re-prefill share, then the compute
+        remainder split across dispatch groups (``phase_compute/b<N>``)
+        proportional to each group's stall-free span."""
+        if self.ledger is None:
+            return
+        rt = min(max(retrans_s, 0.0), step_dt)
+        stall = min(max(stall_s, 0.0), step_dt)
+        weight = max(stall - rt, 0.0)
+        self._bill_time("dma_retransfer", rt)
+        self._bill_time("weight_stall", weight)
+        rem = max(step_dt - rt - weight, 0.0)
+        rec = rem * min(max(recovery_frac, 0.0), 1.0)
+        self._bill_time("recovery_reprefill", rec)
+        rem -= rec
+        if rem <= 0.0:
+            return
+        weights = [(d["batch"],
+                    max(d["t1"] - d["t0"] - d["stall_s"], 0.0))
+                   for d in disp]
+        tot = sum(w for _, w in weights)
+        if tot <= 0.0:
+            self._bill_time(f"{phase}_compute/b{fallback_batch}", rem)
+            return
+        for b, w in weights:
+            self._bill_time(f"{phase}_compute/b{b}", rem * w / tot)
+
+    def _drain_dispatches(self, phase: str) -> list:
+        """Pop the manager's per-dispatch cost records, re-emitting them
+        as ``engine`` dispatch spans so the profiler (live or offline)
+        can break groups into kernel-launch vs HBM-read vs compute."""
+        mgr = getattr(self.engine, "manager", None)
+        if mgr is None:
+            return []
+        disp = mgr.drain_dispatch_log()
+        if self.trace is not None:
+            for d in disp:
+                self.trace.span("engine", "dispatch", d["t0"], d["t1"],
+                                phase=phase, batch=d["batch"],
+                                compute_s=d["compute_s"],
+                                hbm_load_s=d["hbm_load_s"],
+                                hbm_read_s=d["hbm_read_s"],
+                                kernel_launch_s=d["kernel_launch_s"],
+                                stall_s=d["stall_s"])
+        return disp
 
     def _admit(self, req: ServingRequest, active: List[ServingRequest]):
         """Admit (or resume) one request into the active set."""
@@ -604,16 +709,26 @@ class ContinuousBatchScheduler:
         if not pf:
             return 0.0, 0, 0.0, 0.0, 0, {}
         t_pf0 = eng.clock
+        r_pf0 = self._retrans_s()
+        if eng.manager is not None:
+            # anything still in the log predates this step (warmup,
+            # restores) — keep the drain below step-pure
+            eng.manager.dispatch_log.clear()
         before = {r.rid: r.session.prompt_done for r in pf}
         rep = eng.prefill_step([r.session for r in pf],
                                self.prefill_chunk)
+        disp = self._drain_dispatches("prefill")
+        step_dt = eng.clock - t_pf0
+        step_rt = min(max(self._retrans_s() - r_pf0, 0.0), step_dt)
         protect = [r.rid for r in active]
         chunks = 0
         deltas: Dict[int, int] = {}
         for r in pf:
             delta = r.session.prompt_done - before[r.rid]
             if delta > 0:
-                eng.advance_clock(kv.extend(r.rid, delta, protect))
+                dt_ext = kv.extend(r.rid, delta, protect)
+                eng.advance_clock(dt_ext)
+                self._bill_time("kv_stall", dt_ext)
                 chunks += 1
                 deltas[r.rid] = delta
                 if self.trace is not None:
@@ -635,6 +750,12 @@ class ContinuousBatchScheduler:
                         r.rid, r.true_prompt(),
                         prefix_hit=r.prefix_hit,
                         now=eng.clock - self._t0)
+        if self.ledger is not None:
+            tot_tok = sum(deltas.values())
+            rec_tok = sum(deltas.get(r.rid, 0) for r in pf if r.recoveries)
+            self._bill_step("prefill", step_dt, step_rt, rep.stall_s,
+                            disp, len(pf),
+                            rec_tok / tot_tok if tot_tok else 0.0)
         if chunks and self.trace is not None:
             self.trace.span("sched", "prefill_step", t_pf0, eng.clock,
                             requests=len(pf), chunks=chunks,
@@ -673,7 +794,9 @@ class ContinuousBatchScheduler:
         while self.kv.over_budget() and len(active) > 1:
             victim = self.policy.victim_order(active)[0]
             active.remove(victim)
-            self.engine.advance_clock(self.kv.swap_out(victim.rid))
+            dt_sw = self.kv.swap_out(victim.rid)
+            self.engine.advance_clock(dt_sw)
+            self._bill_time("kv_stall", dt_sw)
             if self.prefix is not None:
                 # refs are kept (nodes can't be reclaimed) but the pins
                 # drop, so a parked request's prefix may age to DRAM/SSD
@@ -730,6 +853,8 @@ class ContinuousBatchScheduler:
             # accountant times are run-relative; counters land on the
             # absolute engine clock like every other trace event
             accountant.attach_trace(self.trace, t0=clock_start)
+            if self.health is not None:
+                self.health.attach_trace(self.trace, t0=clock_start)
         # prefix counters are lifetime (the tree outlives runs); snapshot
         # so this run's report shows per-run rates, not cumulative ones
         prefix0 = self.prefix.stats() if self.prefix is not None else {}
@@ -746,6 +871,9 @@ class ContinuousBatchScheduler:
         while i < len(pending) or waiting or active:
             iter_clock0 = eng.clock
             iter_compute = 0.0
+            # per-iteration time bill: the carbon slice below is split
+            # across ledger categories in proportion to it
+            self._iter_bill = {} if self.ledger is not None else None
             now = eng.clock - clock_start
             while i < len(pending) and pending[i].arrival_s <= now:
                 waiting.append(pending[i])
@@ -766,8 +894,13 @@ class ContinuousBatchScheduler:
                 dt = max(min(targets) - now, 1e-9)
                 t_idle0 = eng.clock
                 eng.advance_clock(dt)
-                accountant.charge(now, dt, 0.0, self._dram_gb(),
-                                  active=False)
+                g_idle = accountant.charge(now, dt, 0.0, self._dram_gb(),
+                                           active=False)
+                if self.ledger is not None:
+                    self.ledger.bill("idle", dt)
+                    self.ledger.bill_g("idle", g_idle)
+                if self.health is not None:
+                    self.health.evaluate(eng.clock - clock_start)
                 if self.trace is not None:
                     self.trace.span("sched", "idle", t_idle0, eng.clock,
                                     waiting=len(waiting))
@@ -781,6 +914,8 @@ class ContinuousBatchScheduler:
             # *before* the budget check: hit tokens live in shared radix
             # blocks, so only the suffix needs blocks of the request's
             # own
+            t_adm0 = eng.clock
+            r_adm0 = self._retrans_s()
             for req in self.policy.admission_order(waiting, now):
                 if len(active) >= self.max_batch:
                     break
@@ -805,6 +940,9 @@ class ContinuousBatchScheduler:
                     # failure) and keep serving everyone else
                     recoveries += self._on_block_lost(e, req, waiting,
                                                       failed)
+            # every clock advance inside admission is a KV residency
+            # charge (ensure_resident / restores), net of DMA retransfer
+            self._bill_region("kv_stall", t_adm0, r_adm0)
             # one prefill chunk per prefilling request, then resolve KV
             # pressure (possibly preempting mid-prefill), then decode
             comp, chunks, pf_stall, pf_overlap, pf_disp, pf_deltas = \
@@ -830,7 +968,16 @@ class ContinuousBatchScheduler:
             self._prefetch_ahead(waiting, eng.clock - clock_start)
             if running:
                 t_dec0 = eng.clock
+                r_dec0 = self._retrans_s()
+                if eng.manager is not None:
+                    eng.manager.dispatch_log.clear()
                 rep = eng.decode_step([r.session for r in running])
+                dec_disp = self._drain_dispatches("decode")
+                dec_dt = eng.clock - t_dec0
+                self._bill_step(
+                    "decode", dec_dt,
+                    min(max(self._retrans_s() - r_dec0, 0.0), dec_dt),
+                    rep.stall_s, dec_disp, len(running))
                 iter_compute += rep.compute_s
                 decode_steps += 1
                 jit_dispatches += rep.jit_dispatches
@@ -838,8 +985,10 @@ class ContinuousBatchScheduler:
                 overlapped += rep.overlapped_bytes
                 for r in running:
                     kv.touch(r.rid)
-                    eng.advance_clock(
-                        kv.append_token(r.rid, [x.rid for x in active]))
+                    dt_app = kv.append_token(r.rid,
+                                             [x.rid for x in active])
+                    eng.advance_clock(dt_app)
+                    self._bill_time("kv_stall", dt_app)
                     r.generated += 1
                     if r.first_token_s is None:
                         r.first_token_s = eng.clock - clock_start
@@ -888,6 +1037,15 @@ class ContinuousBatchScheduler:
                         r.gco2_decode_g += g
                 if self._m is not None:
                     self._m["gco2"].inc(slice_g)
+            if self.ledger is not None and slice_g > 0.0:
+                # operational carbon follows time: split the slice across
+                # this iteration's billed categories by time share
+                bill_tot = sum(self._iter_bill.values())
+                if bill_tot > 0.0:
+                    for cat, dtc in self._iter_bill.items():
+                        self.ledger.bill_g(cat, slice_g * dtc / bill_tot)
+                else:
+                    self.ledger.bill_g("other", slice_g)
             # finish events fire *after* carbon attribution so the
             # instant's gco2_g carries the request's full footprint
             for r in finished_now:
@@ -898,6 +1056,8 @@ class ContinuousBatchScheduler:
                                        gco2_g=r.gco2_g)
                 if self._m is not None:
                     self._m["finished"].inc()
+                    if r.slo is not None and not r.slo_met():
+                        self._m["slo_violations"].inc()
                     self._m["ttft"].observe(r.ttft_s)
                     self._m["latency"].observe(r.latency_s)
                     self._m["tpot"].observe(r.tpot_s)
@@ -911,6 +1071,24 @@ class ContinuousBatchScheduler:
                 self._m["active"].set(len(active))
                 self._m["waiting"].set(len(waiting))
                 self._m["hbm_kv"].set(kv.hbm_used)
+                self._m["ssd_quarantined"].set(
+                    1.0 if kv.ssd_quarantined else 0.0)
+                self._m["dram_overcommit"].set(
+                    max(kv.dram.used_bytes - kv.dram.capacity, 0))
+                if self.prefix is not None:
+                    pcur = self.prefix.stats()
+                    self._m["prefix_hit_rate"].set(
+                        pcur["prefix_hit_tokens"]
+                        / max(pcur["prefix_lookup_tokens"], 1))
+                if self.trace is not None and \
+                        self.trace.dropped_events > self._trace_drops_seen:
+                    self._m["trace_drops"].inc(
+                        self.trace.dropped_events - self._trace_drops_seen)
+                    self._trace_drops_seen = self.trace.dropped_events
+            if self.health is not None:
+                self.health.evaluate(eng.clock - clock_start)
+            if self.ledger is not None and self.trace is not None:
+                self.ledger.emit(self.trace, eng.clock)
             if self.snapshotter is not None:
                 self.snapshotter.tick(eng.clock)
             self._persist_tick()
@@ -919,10 +1097,25 @@ class ContinuousBatchScheduler:
         if horizon_s is not None and horizon_s > span:
             # bill trailing idle (deep-idle power) to the fixed serving
             # window; the engine clock itself stays at the true span
-            accountant.charge(span, horizon_s - span, 0.0, self._dram_gb(),
-                              active=False)
+            g_trail = accountant.charge(span, horizon_s - span, 0.0,
+                                        self._dram_gb(), active=False)
+            if self.ledger is not None:
+                self.ledger.bill("trailing_idle", horizon_s - span)
+                self.ledger.bill_g("trailing_idle", g_trail)
         total_tokens = sum(r.generated for r in finished)
         carbon = accountant.totals()
+        if self.health is not None:
+            self.health.close(span)
+        if self.ledger is not None:
+            # conservation targets: the span (plus any horizon tail,
+            # already billed as trailing_idle) and the accountant's
+            # operational total; embodied carbon amortises by wall share
+            # and is reported separately, never per category
+            self.ledger.close(span_s=span, horizon_s=horizon_s,
+                              gco2_total_g=carbon["oce_g"],
+                              embodied_g=carbon["ece_g"])
+            if self.trace is not None:
+                self.ledger.emit(self.trace, eng.clock)
         cache_stats = {}
         if eng.manager:
             pre = eng.manager.preloader.stats

@@ -1,0 +1,527 @@
+"""Conservation ledger, span profiler, health engine, SSD re-probe.
+
+Acceptance properties (docs/OBSERVABILITY.md):
+
+* the :class:`TimeLedger` conserves: category sums reproduce the
+  horizon (time) and the accountant's operational total (gCO2) within
+  tolerance; negative charges refuse; the streamed ``ledger`` counter
+  samples reconstruct the same ledger from a trace file alone;
+* the span profiler nests spans by time containment with exact
+  self/total accounting, emits valid collapsed-stack lines, aggregates
+  dispatch groups and ranks the hottest requests;
+* the health engine evaluates value/rate/ratio/quantile rules on
+  modeled-clock snapshots, honors ``for_s`` holds, records
+  firing/resolved transitions, skips unreported metrics, and
+  round-trips rule files and alert JSONL;
+* a traced + ledgered serving run balances to ~0 residue without
+  perturbing the modeled clock, and ``scripts/perf_report.py`` rebuilds
+  ledger + profile + alerts from the exported trace;
+* a quarantined SSD tier re-probes on the modeled clock with bounded
+  exponential backoff and rejoins on success (no restart needed) —
+  and stays quarantined forever without a clock, the pre-probe
+  behavior.
+"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+from repro.core.engine import M2CacheEngine
+from repro.obs import (AlertRule, HealthMonitor, MetricsRegistry,
+                       TimeLedger, TraceRecorder, alerts_from_events,
+                       build_tree, collapsed_stacks, default_rules,
+                       dispatch_groups, events_from_chrome,
+                       events_from_recorder, hottest_requests, load_rules,
+                       profile_summary, reconstruct)
+from repro.serving import ContinuousBatchScheduler, requests_from_trace
+from repro.serving.faults import FaultInjector
+from repro.serving.kv_cache import TieredKVCache
+from repro.serving.workload import ArrivalEvent
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                       / "scripts"))
+import perf_report  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# TimeLedger
+
+
+def test_ledger_billing_and_conservation():
+    led = TimeLedger()
+    led.bill("prefill_compute/b4", 2.0)
+    led.bill("prefill_compute/b8", 1.0)
+    led.bill("weight_stall", 6.5)
+    led.bill("idle", 0.5)
+    led.bill_g("weight_stall", 0.9)
+    led.bill_g("idle", 0.1)
+    led.close(span_s=10.0, gco2_total_g=1.0)
+    assert led.time_total() == pytest.approx(10.0)
+    assert led.by_family()["prefill_compute"] == pytest.approx(3.0)
+    assert led.check() == []                 # conserves exactly
+    res = led.residues()
+    assert res["time_residue_frac"] == pytest.approx(0.0)
+    assert res["gco2_residue_frac"] == pytest.approx(0.0)
+    assert led.summary()["conserved"]
+
+
+def test_ledger_detects_unbilled_and_negative_charges():
+    led = TimeLedger()
+    led.bill("decode_compute/b1", 5.0)
+    led.close(span_s=10.0)                   # 50% of the horizon missing
+    errs = led.check()
+    assert len(errs) == 1 and "time residue" in errs[0]
+    assert not led.summary()["conserved"]
+    with pytest.raises(ValueError, match="negative"):
+        led.bill("idle", -0.1)
+    with pytest.raises(ValueError, match="negative"):
+        led.bill_g("idle", -0.1)
+    # an unclosed ledger refuses to claim conservation
+    assert "not closed" in TimeLedger().check()[0]
+
+
+def test_ledger_horizon_extends_past_span():
+    led = TimeLedger()
+    led.bill("decode_compute/b2", 4.0)
+    led.bill("trailing_idle", 6.0)
+    led.close(span_s=4.0, horizon_s=10.0)
+    assert led.horizon_s == 10.0
+    assert led.check() == []
+    # a horizon shorter than the span is clamped to the span
+    led2 = TimeLedger()
+    led2.bill("idle", 3.0)
+    led2.close(span_s=3.0, horizon_s=1.0)
+    assert led2.horizon_s == 3.0
+
+
+def test_ledger_trace_roundtrip_and_export(tmp_path):
+    led = TimeLedger()
+    led.bill("prefill_compute/b4", 1.25)
+    led.bill("kv_stall", 0.75)
+    led.bill_g("kv_stall", 0.5)
+    led.close(span_s=2.0, gco2_total_g=0.5, embodied_g=0.1)
+    tr = TraceRecorder()
+    led.emit(tr, 1.0)
+    led.emit(tr, 2.0)                        # cumulative: last sample wins
+    back = reconstruct(events_from_recorder(tr))
+    assert back.time_s == pytest.approx(led.time_s)
+    assert back.gco2_g == pytest.approx(led.gco2_g)
+    assert back.span_s == led.span_s
+    assert back.gco2_total_g == led.gco2_total_g
+    assert back.check() == []
+    # and through a Chrome export file (the perf_report path)
+    path = tmp_path / "l.trace.json"
+    tr.export_chrome(str(path))
+    back2 = reconstruct(events_from_chrome(json.loads(path.read_text())))
+    assert back2.time_total() == pytest.approx(led.time_total())
+    led.export(str(tmp_path / "l.ledger.json"))
+    doc = json.loads((tmp_path / "l.ledger.json").read_text())
+    assert doc["conserved"] and doc["time_s"]["kv_stall"] == 0.75
+
+
+# ---------------------------------------------------------------------------
+# span profiler
+
+
+def test_tree_self_total_nesting():
+    tr = TraceRecorder()
+    tr.span("sched", "outer", 0.0, 10.0)
+    tr.span("sched", "inner", 1.0, 4.0)      # child of outer
+    tr.span("sched", "inner", 5.0, 7.0)      # second call
+    tr.span("sched", "leaf", 2.0, 3.0)       # grandchild under inner #1
+    tree = build_tree(events_from_recorder(tr))
+    outer = tree["sched"]["children"]["outer"]
+    inner = outer["children"]["inner"]
+    leaf = inner["children"]["leaf"]
+    assert outer["total_s"] == pytest.approx(10.0)
+    assert inner["total_s"] == pytest.approx(5.0) and inner["count"] == 2
+    assert leaf["total_s"] == pytest.approx(1.0)
+    assert inner["self_s"] == pytest.approx(4.0)
+    assert outer["self_s"] == pytest.approx(5.0)
+    lines = collapsed_stacks(tree)
+    assert "sched;outer 5000000" in lines
+    assert "sched;outer;inner;leaf 1000000" in lines
+    # every line is "frames <int-us>"
+    for ln in lines:
+        stack, us = ln.rsplit(" ", 1)
+        assert int(us) > 0 and stack.startswith("sched;")
+
+
+def test_dispatch_groups_and_hottest_requests():
+    tr = TraceRecorder()
+    for t in (0.0, 1.0):
+        tr.span("engine", "dispatch", t, t + 0.5, phase="decode", batch=2,
+                compute_s=0.1, hbm_load_s=0.0, hbm_read_s=0.2,
+                kernel_launch_s=0.01, stall_s=0.19)
+    tr.span("engine", "dispatch", 2.0, 2.4, phase="prefill", batch=8,
+            compute_s=0.3, hbm_load_s=0.0, hbm_read_s=0.05,
+            kernel_launch_s=0.01, stall_s=0.0)
+    tr.span("req:0", "queued", 0.0, 1.0)
+    tr.span("req:0", "decode", 1.0, 4.0)
+    tr.span("req:1", "prefill", 0.0, 2.0)
+    tr.span("req:1", "preempted", 2.0, 2.5)
+    evs = events_from_recorder(tr)
+    g = dispatch_groups(evs)
+    assert g["decode/b2"]["dispatches"] == 2
+    assert g["decode/b2"]["hbm_read_s"] == pytest.approx(0.4)
+    assert g["prefill/b8"]["total_s"] == pytest.approx(0.4)
+    hot = hottest_requests(evs, n=1)
+    assert hot[0]["rid"] == "0" and hot[0]["busy_s"] == pytest.approx(3.0)
+    both = hottest_requests(evs, n=5)
+    assert [r["rid"] for r in both] == ["0", "1"]
+    assert both[1]["parked_s"] == pytest.approx(0.5)
+    prof = profile_summary(evs, top=1)
+    assert prof["tracks"]["engine"]["spans"] == 3
+    assert len(prof["hottest_requests"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# health / alert rules
+
+
+def _tick(reg, **vals):
+    for name, v in vals.items():
+        reg.counter(name).inc(v)
+
+
+def test_alert_rule_validation_and_files(tmp_path):
+    with pytest.raises(ValueError, match="unknown op"):
+        AlertRule("x", "m", op="!=")
+    with pytest.raises(ValueError, match="unknown mode"):
+        AlertRule("x", "m", mode="median")
+    with pytest.raises(ValueError, match="denominator"):
+        AlertRule("x", "m", mode="ratio")
+    with pytest.raises(ValueError, match="unknown fields"):
+        AlertRule.from_dict({"name": "x", "metric": "m", "severty": "oops"})
+    rules = default_rules()
+    assert {r.name for r in rules} >= {
+        "slo_burn", "ttft_p95_high", "ssd_quarantine", "recovery_rate",
+        "failure_rate", "dram_overcommit", "prefix_hit_collapse",
+        "trace_ring_drops", "snapshot_drops"}
+    path = tmp_path / "rules.json"
+    path.write_text(json.dumps({"rules": [r.to_dict() for r in rules]}))
+    assert [r.name for r in load_rules(str(path))] == \
+        [r.name for r in rules]
+    # a bare list loads too
+    path.write_text(json.dumps([rules[0].to_dict()]))
+    assert load_rules(str(path))[0].name == rules[0].name
+
+
+def test_health_value_rule_fires_and_resolves():
+    reg = MetricsRegistry()
+    g = reg.gauge("pressure")
+    hm = HealthMonitor(reg, [AlertRule("hot", "pressure", op=">",
+                                       threshold=5.0)])
+    assert hm.evaluate(0.0) == []            # unset gauge: rule skipped
+    g.set(3.0)
+    assert hm.evaluate(1.0) == []
+    g.set(9.0)
+    new = hm.evaluate(2.0)
+    assert [a["state"] for a in new] == ["firing"]
+    assert hm.active() == ["hot"] and hm.fired("hot")
+    assert hm.evaluate(3.0) == []            # still firing: no re-record
+    g.set(1.0)
+    assert [a["state"] for a in hm.evaluate(4.0)] == ["resolved"]
+    assert hm.active() == []
+    assert hm.counts()["firing"] == 1 and hm.counts()["resolved"] == 1
+
+
+def test_health_for_s_hold_and_rate_window():
+    reg = MetricsRegistry()
+    reg.gauge("v").set(10.0)
+    hm = HealthMonitor(reg, [AlertRule("held", "v", op=">", threshold=1.0,
+                                       for_s=2.0)])
+    assert hm.evaluate(0.0) == []            # pending, not yet held
+    assert hm.evaluate(1.0) == []
+    assert [a["rule"] for a in hm.evaluate(2.5)] == ["held"]
+    # rate: an empty counter is a zero baseline, so the first increments
+    # within the window register as a positive rate
+    reg2 = MetricsRegistry()
+    c = reg2.counter("evs_total")
+    hm2 = HealthMonitor(reg2, [AlertRule("busy", "evs_total", mode="rate",
+                                         window_s=2.0, op=">",
+                                         threshold=1.0)])
+    assert hm2.evaluate(0.0) == []
+    c.inc(10)
+    assert [a["rule"] for a in hm2.evaluate(1.0)] == ["busy"]  # 10/s
+    # window slides: no new increments -> rate decays -> resolves
+    assert hm2.evaluate(2.0) == []           # still >1 within window
+    assert [a["state"] for a in hm2.evaluate(4.0)] == ["resolved"]
+
+
+def test_health_ratio_and_quantile_rules():
+    reg = MetricsRegistry()
+    bad = reg.counter("bad_total")
+    tot = reg.counter("all_total")
+    h = reg.histogram("lat", buckets=(0.1, 1.0, 10.0))
+    hm = HealthMonitor(reg, [
+        AlertRule("burn", "bad_total", mode="ratio",
+                  denominator="all_total", op=">", threshold=0.5),
+        AlertRule("slow", "lat", mode="p50", op=">", threshold=1.0),
+    ])
+    assert hm.evaluate(0.0) == []            # zero denominator: skipped
+    tot.inc(4)
+    bad.inc(3)
+    assert [a["rule"] for a in hm.evaluate(1.0)] == ["burn"]
+    for v in (0.05, 5.0, 5.0, 5.0):
+        h.observe(v)
+    new = hm.evaluate(2.0)
+    assert [a["rule"] for a in new] == ["slow"]
+    assert new[0]["value"] > 1.0
+
+
+def test_health_trace_instants_and_jsonl_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    reg.gauge("v").set(2.0)
+    tr = TraceRecorder()
+    hm = HealthMonitor(reg, [AlertRule("a", "v", op=">", threshold=1.0,
+                                       severity="critical")])
+    hm.attach_trace(tr, t0=100.0)
+    hm.evaluate(1.5)
+    reg.gauge("v").set(0.0)
+    hm.close(3.0)
+    path = tmp_path / "a.alerts.jsonl"
+    assert hm.export_jsonl(str(path)) == 2
+    rows = [json.loads(x) for x in path.read_text().splitlines()]
+    assert [r["state"] for r in rows] == ["firing", "resolved"]
+    assert rows[0]["severity"] == "critical" and rows[0]["t"] == 1.5
+    # instants land on the absolute clock (t0 + run-relative time) and
+    # replay through the perf_report path
+    back = alerts_from_events(events_from_recorder(tr))
+    assert [a["state"] for a in back] == ["firing", "resolved"]
+    assert back[0]["t"] == pytest.approx(101.5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: ledgered serving run conserves, reconstructs, stays free
+
+
+def _ledgered_run(tmp_path, tag, *, obs=False, horizon_s=None):
+    eng = M2CacheEngine(paper_model="llama-7b", dram_capacity_gb=6.0,
+                        ssd_dir=str(tmp_path / tag))
+    kw = {}
+    if obs:
+        reg = MetricsRegistry()
+        kw = dict(trace=TraceRecorder(), metrics=reg,
+                  ledger=TimeLedger(), health=HealthMonitor(reg))
+    sched = ContinuousBatchScheduler(
+        eng, max_batch=2, hbm_kv_gb=2e-4, dram_kv_gb=1e-4,
+        prefill_chunk=8, **kw)
+    reqs = requests_from_trace(
+        [ArrivalEvent(rid=i, arrival_s=0.3 * i, prompt_len=12 + 4 * i,
+                      max_new_tokens=4 + i) for i in range(4)])
+    return sched, sched.run(reqs, horizon_s=horizon_s)
+
+
+def test_serving_run_conserves_time_and_carbon(tmp_path):
+    sched, rep = _ledgered_run(tmp_path, "led", obs=True, horizon_s=30.0)
+    led = sched.ledger
+    assert led.check() == []
+    res = led.residues()
+    assert res["time_residue_frac"] < 1e-9   # exact by construction
+    assert res["gco2_residue_frac"] < 1e-9
+    assert led.span_s == pytest.approx(rep.modeled_span_s)
+    assert led.gco2_total_g == pytest.approx(rep.carbon["oce_g"])
+    fam = led.by_family()
+    assert fam["trailing_idle"] == pytest.approx(
+        30.0 - rep.modeled_span_s)
+    assert fam.get("prefill_compute", 0.0) > 0
+    assert fam.get("decode_compute", 0.0) > 0
+    assert fam.get("weight_stall", 0.0) > 0  # DRAM-resident weights stall
+
+
+def test_ledger_and_health_never_perturb_modeled_clock(tmp_path):
+    _, rep_off = _ledgered_run(tmp_path, "off")
+    _, rep_on = _ledgered_run(tmp_path, "on", obs=True)
+    assert rep_on.modeled_span_s == rep_off.modeled_span_s
+    assert rep_on.decode_steps == rep_off.decode_steps
+    assert [r.ttft_s for r in rep_on.requests] == \
+        [r.ttft_s for r in rep_off.requests]
+    assert rep_on.carbon["oce_g"] == rep_off.carbon["oce_g"]
+
+
+def test_perf_report_rebuilds_from_trace_alone(tmp_path):
+    sched, rep = _ledgered_run(tmp_path, "pr", obs=True)
+    path = tmp_path / "run.trace.json"
+    sched.trace.export_chrome(str(path))
+    out = perf_report.report(str(path), top=3,
+                             collapsed=str(tmp_path / "run.collapsed"))
+    led = out["ledger"]
+    assert led["conserved"]
+    assert led["span_s"] == pytest.approx(rep.modeled_span_s)
+    assert led["gco2_total_g"] == pytest.approx(rep.carbon["oce_g"])
+    assert sum(led["time_by_family_s"].values()) == \
+        pytest.approx(led["horizon_s"])
+    groups = out["profile"]["dispatch_groups"]
+    assert any(k.startswith("prefill/") for k in groups)
+    assert any(k.startswith("decode/") for k in groups)
+    # dispatch-group cost terms were carried through the trace
+    assert sum(g["hbm_read_s"] for g in groups.values()) > 0
+    assert sum(g["kernel_launch_s"] for g in groups.values()) > 0
+    assert len(out["profile"]["hottest_requests"]) == 3
+    assert (tmp_path / "run.collapsed").read_text().strip()
+    # cross-check mode agrees with the run's own summary JSON
+    summary = {"summary": {"modeled_span_s": rep.modeled_span_s},
+               "carbon_g": rep.carbon}
+    spath = tmp_path / "out.json"
+    spath.write_text(json.dumps(summary, default=float))
+    cc = perf_report.cross_check(
+        reconstruct(events_from_chrome(
+            json.loads(path.read_text()))), str(spath))
+    assert cc["ok"]
+
+
+# ---------------------------------------------------------------------------
+# scripts/trace_report.py: the offline reconstruction must match the
+# ServingReport (TTFT, tier traffic, carbon) from the trace file alone
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config("qwen2.5-14b", tiny=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32,
+                           m2=True)
+    return cfg, params
+
+
+@pytest.mark.slow
+def test_trace_report_matches_serving_report(tmp_path, tiny_model):
+    import trace_report
+    from repro.serving import shared_prefix_trace
+    cfg, params = tiny_model
+    eng = M2CacheEngine(cfg=cfg, params=params, dram_capacity_gb=0.5,
+                        batched_decode=True, prefill_bucket=8, seed=0)
+    reg = MetricsRegistry()
+    sched = ContinuousBatchScheduler(
+        eng, max_batch=4, hbm_kv_gb=1.1e-4, dram_kv_gb=5e-5,
+        prefill_chunk=8, prefix_caching=True, trace=TraceRecorder(),
+        metrics=reg, ledger=TimeLedger(), health=HealthMonitor(reg))
+    events = shared_prefix_trace(6, rate_rps=1e4, num_groups=2,
+                                 prefix_len=12, reuse_ratio=0.75, turns=2,
+                                 gen_len=(12, 16),
+                                 vocab_size=cfg.vocab_size, seed=0)
+    rep = sched.run(requests_from_trace(events, vocab_size=cfg.vocab_size,
+                                        seed=0))
+    path = tmp_path / "run.trace.json"
+    sched.trace.export_chrome(str(path))
+    out = trace_report.report(str(path))
+    # TTFT / latency reconstructed from spans == scheduler's accounting
+    timelines = out["requests"]
+    assert sorted(timelines) == sorted(r.rid for r in rep.requests)
+    for r in rep.requests:
+        assert timelines[r.rid]["ttft_s"] == pytest.approx(r.ttft_s,
+                                                           abs=1e-9)
+        assert timelines[r.rid]["latency_s"] == pytest.approx(
+            r.latency_s, abs=1e-9)
+    # tier traffic: the kv-instant edges sum back to the cache's own
+    # byte counters, edge by direction
+    edges = out["tier_transfers"]
+    assert rep.preemptions > 0 and edges    # the budgets force paging
+    down = sum(g["bytes"] for e, g in edges.items()
+               if e in ("hbm->dram", "dram->ssd"))
+    up = sum(g["bytes"] for e, g in edges.items()
+             if e in ("dram->hbm", "ssd->hbm"))
+    assert down == pytest.approx(rep.kv_stats["kv_swap_out_bytes"])
+    assert up == pytest.approx(rep.kv_stats["kv_swap_in_bytes"])
+    assert edges.get("dram->ssd", {}).get("bytes", 0) == \
+        pytest.approx(rep.kv_stats["kv_ssd_write_bytes"])
+    assert edges.get("ssd->hbm", {}).get("bytes", 0) == \
+        pytest.approx(rep.kv_stats["kv_ssd_read_bytes"])
+    # carbon counter track replays the accountant's operational total
+    assert out["carbon"]["gco2_total"] == pytest.approx(
+        rep.carbon["oce_g"], abs=1e-12)
+    # and the run's ledger balanced with a real kv_stall share
+    led = sched.ledger
+    assert led.check() == []
+    assert led.by_family().get("kv_stall", 0.0) > 0
+
+
+# ---------------------------------------------------------------------------
+# SSD quarantine re-probe (bounded backoff, modeled clock)
+
+
+def _probed_kv(tmp_path, faults, clock, **kw):
+    kv = TieredKVCache(
+        num_layers=2, d_model=8, hbm_capacity_bytes=1 << 20,
+        dram_capacity_bytes=1 << 20, ssd_dir=str(tmp_path / "kv"),
+        block_tokens=4, bytes_per_token=256.0, faults=faults,
+        ssd_probe_cooldown_s=1.0, ssd_probe_cooldown_max_s=4.0, **kw)
+    kv.set_clock(clock)
+    return kv
+
+
+def _trip(kv):
+    for _ in range(kv.ssd_breaker_threshold):
+        kv._note_ssd_failure()
+    assert kv.ssd_quarantined
+
+
+def test_quarantine_reprobe_backoff_and_rejoin(tmp_path):
+    t = [0.0]
+    inj = FaultInjector().arm("ssd.write", rate=1.0, until_s=3.5)
+    inj.set_clock(lambda: t[0])
+    kv = _probed_kv(tmp_path, inj, lambda: t[0])
+    tr = TraceRecorder()
+    kv.attach_obs(trace=tr, clock=lambda: t[0])
+    _trip(kv)
+    # inside the cooldown: no probe at all
+    t[0] = 0.5
+    assert not kv._ssd_usable() and kv.ssd_probes == 0
+    # first probe at t=1.0 fails (write fault window) -> cooldown doubles
+    t[0] = 1.0
+    assert not kv._ssd_usable()
+    assert kv.ssd_probes == 1 and kv.ssd_probe_failures == 1
+    # still inside the doubled (2s) cooldown: no second probe
+    t[0] = 2.5
+    assert not kv._ssd_usable() and kv.ssd_probes == 1
+    # second probe at t=3.0 fails again -> cooldown doubles to 4s
+    t[0] = 3.0
+    assert not kv._ssd_usable() and kv.ssd_probe_failures == 2
+    # the fault window closed; probe at t=7.0 succeeds -> tier rejoins
+    t[0] = 7.0
+    assert kv._ssd_usable()
+    assert not kv.ssd_quarantined and kv.ssd_rejoins == 1
+    names = [e.name for e in tr.events()]
+    assert names.count("ssd_probe_failed") == 2
+    assert "ssd_rejoin" in names
+    s = kv.stats()
+    assert s["kv_ssd_probes"] == 3 and s["kv_ssd_rejoins"] == 1
+    assert s["kv_ssd_quarantined"] == 0.0
+
+
+def test_quarantine_without_clock_stays_quarantined(tmp_path):
+    """No modeled-clock reader -> no probes: the pre-probe behavior
+    (quarantined until restart) is preserved, never an exception."""
+    kv = TieredKVCache(
+        num_layers=2, d_model=8, hbm_capacity_bytes=1 << 20,
+        dram_capacity_bytes=1 << 20, ssd_dir=str(tmp_path / "kv"),
+        block_tokens=4, bytes_per_token=256.0)
+    _trip(kv)
+    assert not kv._ssd_usable()
+    assert kv.ssd_probes == 0 and kv.ssd_quarantined
+
+
+def test_quarantine_cooldown_caps_and_resets(tmp_path):
+    t = [0.0]
+    inj = FaultInjector().arm("ssd.write", rate=1.0, until_s=100.0)
+    inj.set_clock(lambda: t[0])
+    kv = _probed_kv(tmp_path, inj, lambda: t[0])
+    _trip(kv)
+    # drive repeated failed probes: 1 -> 2 -> 4 -> capped at 4
+    for _ in range(5):
+        t[0] = kv._next_probe_at
+        kv._ssd_usable()
+    assert kv._probe_cooldown == pytest.approx(4.0)   # capped at max
+    # a successful rejoin resets the schedule for the next quarantine
+    t[0] = 200.0
+    inj2 = FaultInjector()                   # no rules: probes succeed
+    kv.attach_faults(inj2)
+    t[0] = max(t[0], kv._next_probe_at)
+    assert kv._ssd_usable() and kv.ssd_rejoins == 1
+    assert kv._probe_cooldown == pytest.approx(1.0)
+    assert kv._next_probe_at is None
