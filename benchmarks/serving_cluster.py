@@ -1,0 +1,201 @@
+"""Cluster router benchmark: prefix-aware placement vs round-robin.
+
+Serves one diurnal shared-prefix trace (real tiny model: actual jit'd
+prefill/decode, modeled transfer clock) through three 3-replica
+clusters that differ only in the router:
+
+  round-robin    — affinity-blind baseline: same-prefix requests are
+                   scattered across replicas, so every replica pays
+                   full prefill for prefixes its siblings already hold;
+  routed         — the ``prefix`` policy: the router's shadow radix
+                   indices steer same-prefix requests to the replica
+                   that already owns their blocks (least-loaded
+                   fallback), turning N private prefix caches into one
+                   cluster-wide asset;
+  carbon         — the ``carbon`` policy + phase-shifted per-replica
+                   grid traces + the carbon autoscaler draining the
+                   replica tail in dirty hours. Reported and
+                   boolean-gated (drains happen, drained replicas admit
+                   nothing); its gCO2 is not compared against the
+                   others because it deliberately trades throughput
+                   capacity for clean energy.
+
+All three clusters are billed to the same ``--horizon`` window (idle
+and parked replicas pay deep-idle power), so cluster gCO2/request is an
+apples-to-apples comparison. Tokens must be byte-identical across all
+routers — placement moves modeled cost, never numerics — and one
+replica of the routed cluster is re-run standalone to spot-check the
+two-phase guarantee that each replica run IS a serial single-replica
+run (the full invariant is regression-tested in tests/test_cluster.py).
+
+Emits ``BENCH_cluster.json`` next to this file (gated in CI by
+``scripts/check_bench.py``).
+
+  PYTHONPATH=src python benchmarks/serving_cluster.py [--requests 12]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.core.carbon import CarbonIntensityTrace
+from repro.core.engine import M2CacheEngine
+from repro.serving import (CarbonAutoscaler, ClusterRouter, Replica,
+                           assign_slo_classes, diurnal_trace,
+                           shifted_trace)
+
+
+def build_events(args, cfg):
+    events = diurnal_trace(
+        args.requests, period_s=args.period, num_groups=args.groups,
+        prefix_len=args.prefix_len, reuse_ratio=args.reuse,
+        suffix_len=(args.suffix_len, args.suffix_len),   # equal prompt
+        gen_len=(args.gen_len - 2, args.gen_len + 2),    # lengths: one
+        vocab_size=cfg.vocab_size, seed=args.seed)       # jit shape
+    return assign_slo_classes(events, {"interactive": 0.5, "batch": 0.5},
+                              seed=args.seed)
+
+
+def make_replica(name, args, cfg, params, *, carbon_trace):
+    eng = M2CacheEngine(cfg=cfg, params=params,
+                        dram_capacity_gb=args.dram_gb, seed=args.seed)
+    return Replica(name, eng, carbon_trace=carbon_trace,
+                   max_batch=args.max_batch,
+                   prefill_chunk=args.prefill_chunk,
+                   hbm_kv_gb=args.hbm_kv_gb, dram_kv_gb=args.dram_kv_gb)
+
+
+def run_cluster(name, policy, args, cfg, params, events, *,
+                shifts=None, autoscale=False):
+    base = CarbonIntensityTrace.diurnal(period_s=args.period)
+    replicas = [
+        make_replica(f"r{i}", args, cfg, params,
+                     carbon_trace=shifted_trace(base, shifts[i])
+                     if shifts else base)
+        for i in range(args.replicas)]
+    router = ClusterRouter(
+        replicas, policy=policy,
+        autoscaler=CarbonAutoscaler(base) if autoscale else None)
+    report = router.run(events, vocab_size=cfg.vocab_size,
+                        horizon_s=args.horizon)
+    s = report.summary()
+    print(f"{name:12s} tok/s={s['tokens_per_s']:8.1f} "
+          f"hit={s['cluster_prefix_hit_rate']:4.2f} "
+          f"gCO2/req={s['gco2_per_request']:.2e} "
+          f"affinity={s['affinity_routed']:2d} drains={s['drains']} "
+          f"slo={s.get('slo_attainment', 0.0):4.2f}")
+    return router, report, s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--period", type=float, default=240.0,
+                    help="modeled day length (arrival + grid cycle)")
+    ap.add_argument("--horizon", type=float, default=None,
+                    help="common billing window (default 1.2x period)")
+    ap.add_argument("--groups", type=int, default=4,
+                    help="shared system-prompt groups")
+    ap.add_argument("--prefix-len", type=int, default=48)
+    ap.add_argument("--suffix-len", type=int, default=6)
+    ap.add_argument("--reuse", type=float, default=0.9)
+    ap.add_argument("--gen-len", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--dram-gb", type=float, default=0.5)
+    ap.add_argument("--hbm-kv-gb", type=float, default=0.25)
+    ap.add_argument("--dram-kv-gb", type=float, default=1.0)
+    ap.add_argument("--min-hit-rate", type=float, default=0.2,
+                    help="required routed cluster-wide prefix hit rate")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_cluster.json "
+                         "next to this script)")
+    args = ap.parse_args()
+    if args.requests < 8:
+        ap.error("acceptance regime is >= 8 requests")
+    if args.horizon is None:
+        args.horizon = 1.2 * args.period
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config(args.arch, tiny=True)
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg,
+                           dtype=jnp.float32, m2=True)
+    events = build_events(args, cfg)
+    shifts = [args.period * i / args.replicas
+              for i in range(args.replicas)]
+
+    rr_router, rr_rep, rr = run_cluster(
+        "round-robin", "round-robin", args, cfg, params, events)
+    pf_router, pf_rep, pf = run_cluster(
+        "routed", "prefix", args, cfg, params, events)
+    cb_router, cb_rep, cb = run_cluster(
+        "carbon", "carbon", args, cfg, params, events,
+        shifts=shifts, autoscale=True)
+
+    # two-phase identity spot check: re-run the busiest routed
+    # replica's sub-trace on a fresh standalone replica
+    busiest = max(pf_router.replicas, key=lambda r: len(r.events))
+    solo = make_replica(
+        "solo", args, cfg, params,
+        carbon_trace=CarbonIntensityTrace.diurnal(period_s=args.period))
+    solo.events = list(busiest.events)
+    solo.run(vocab_size=cfg.vocab_size, horizon_s=args.horizon)
+    serial_identical = solo.tokens() == busiest.tokens()
+
+    drained_clean = all(
+        not r.drained_at(e.arrival_s)
+        for r in cb_router.replicas for e in r.events)
+    sums_ok = all(
+        rep.summary()["requests"]
+        == sum(len(r.requests) for r in c.reports.values())
+        and abs(rep.summary()["gco2_total"]
+                - sum(r.carbon["total_g"] for r in c.reports.values()))
+        < 1e-9
+        for rep, c in ((rr_rep, rr_rep), (pf_rep, pf_rep),
+                       (cb_rep, cb_rep)))
+    checks = {
+        "routed_hit_rate": pf["cluster_prefix_hit_rate"],
+        "rr_hit_rate": rr["cluster_prefix_hit_rate"],
+        "routed_hit_rate_higher":
+            pf["cluster_prefix_hit_rate"] > rr["cluster_prefix_hit_rate"],
+        "routed_hit_rate_ok":
+            pf["cluster_prefix_hit_rate"] >= args.min_hit_rate,
+        "routed_affinity_nonzero": pf["affinity_routed"] > 0,
+        "gco2_per_request_lower":
+            pf["gco2_per_request"] < rr["gco2_per_request"],
+        "gco2_per_request_ratio":
+            rr["gco2_per_request"] / max(pf["gco2_per_request"], 1e-12),
+        "tokens_identical_across_routers":
+            rr_rep.tokens() == pf_rep.tokens() == cb_rep.tokens(),
+        "replica_serial_identity": serial_identical,
+        "summary_sums_consistent": sums_ok,
+        "autoscale_drains_nonzero": cb["drains"] > 0,
+        "drained_no_admissions": drained_clean,
+    }
+    for k, v in checks.items():
+        flag = "" if bool(v) else "  <-- EXPECTED TO HOLD"
+        print(f"  {k}: {v}{flag}")
+
+    rows = {
+        name: {"summary": s,
+               "replicas": {r.name: r.report.summary()
+                            for r in router.replicas}}
+        for name, router, s in (("round-robin", rr_router, rr),
+                                ("routed", pf_router, pf),
+                                ("carbon", cb_router, cb))}
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parent / "BENCH_cluster.json"
+    payload = {"config": vars(args), "systems": rows, "checks": checks}
+    out.write_text(json.dumps(payload, indent=1, default=float))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,7 +45,9 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 BENCH_DIR = ROOT / "benchmarks"
 
 sys.path.insert(0, str(ROOT / "src"))
-from repro.serving.schema import (looks_like_summary,  # noqa: E402
+from repro.serving.schema import (looks_like_cluster_summary,  # noqa: E402
+                                  looks_like_summary,
+                                  validate_cluster_summary,
                                   validate_summary)
 
 #: smoke invocations — the single source of truth (CI's bench job runs
@@ -66,6 +68,8 @@ SMOKE_RUNS = {
                           "--requests", "8"],
     "BENCH_profile.json": ["benchmarks/serving_profile.py",
                            "--requests", "8"],
+    "BENCH_cluster.json": ["benchmarks/serving_cluster.py",
+                           "--requests", "12"],
 }
 
 #: per-artifact regression metrics: (name, dotted path [or "a/b" ratio],
@@ -141,6 +145,18 @@ METRICS = {
         ("chaos_profile_recoveries", "systems.chaos.recoveries",
          "higher"),
     ],
+    "BENCH_cluster.json": [
+        # routed-beats-round-robin is held by the boolean checks
+        # (hit_rate_higher, gco2_per_request_lower, byte-identity);
+        # these band the committed magnitudes of the routing win
+        ("routed_hit_rate", "checks.routed_hit_rate", "higher"),
+        ("gco2_per_request_ratio", "checks.gco2_per_request_ratio",
+         "higher"),
+        ("routed_tok_s", "systems.routed.summary.tokens_per_s",
+         "higher"),
+        ("routed_affinity",
+         "systems.routed.summary.affinity_routed", "higher"),
+    ],
 }
 
 
@@ -152,6 +168,11 @@ def validate_summaries(name: str, doc, context: str) -> list:
         if looks_like_summary(doc):
             try:
                 validate_summary(doc, context=f"{name}:{context}")
+            except ValueError as e:
+                errors.append(str(e))
+        elif looks_like_cluster_summary(doc):
+            try:
+                validate_cluster_summary(doc, context=f"{name}:{context}")
             except ValueError as e:
                 errors.append(str(e))
         else:

@@ -9,6 +9,9 @@ Fails (exit 1) when:
   * a required serving topic (the prefix cache's radix tree,
     refcount and copy-on-write rules, carbon-aware admission) is
     missing from ``docs/SERVING.md``;
+  * a required fleet topic (replicas, the prefix-aware router, the
+    carbon autoscaler, the two-phase byte-identity guarantee) is
+    missing from ``docs/CLUSTER.md``;
   * a ``src/repro/obs/*.py`` module or a required observability topic
     (the modeled-clock timebase, the Perfetto workflow, the
     kv-block-trace replay format) is missing from
@@ -63,6 +66,25 @@ def main():
             errors.append(
                 f"docs/SERVING.md does not document {topic!r} "
                 "(prefix-cache + residency rules must stay written down)")
+
+    cluster_doc = (ROOT / "docs" / "CLUSTER.md").read_text() \
+        if (ROOT / "docs" / "CLUSTER.md").exists() else ""
+    if not cluster_doc:
+        errors.append("docs/CLUSTER.md is missing")
+    for mod in ("cluster.py", "workload.py", "serving_cluster.py",
+                "server.py", "BENCH_cluster.json"):
+        if mod not in cluster_doc:
+            errors.append(f"docs/CLUSTER.md does not mention {mod}")
+    for topic in ("Replica", "ClusterRouter", "shadow radix",
+                  "round-robin", "least-loaded", "prefix-aware",
+                  "carbon", "autoscal", "drain", "park", "diurnal",
+                  "phase-shift", "two-phase", "byte-identical",
+                  "--replicas", "--router", "million-user",
+                  "what the simulation does not model"):
+        if topic.lower() not in cluster_doc.lower():
+            errors.append(
+                f"docs/CLUSTER.md does not document {topic!r} "
+                "(the fleet/router contract must stay written down)")
 
     obs_doc = (ROOT / "docs" / "OBSERVABILITY.md").read_text() \
         if (ROOT / "docs" / "OBSERVABILITY.md").exists() else ""

@@ -28,6 +28,12 @@ requests, batched prefill):
 ZeRO-Inference baseline under the same scheduler:
   PYTHONPATH=src python -m repro.launch.server --paper-model llama-7b \
       --mode zero_infinity --requests 8
+
+Fleet-scale: N replicas behind the prefix-aware cluster router, diurnal
+million-user-sample traffic, carbon-driven autoscaling (docs/CLUSTER.md):
+  PYTHONPATH=src python -m repro.launch.server --paper-model llama-7b \
+      --replicas 3 --router prefix --workload diurnal --requests 24 \
+      --carbon-trace diurnal --autoscale --grid-shift spread
 """
 from __future__ import annotations
 
@@ -36,19 +42,23 @@ import json
 
 from repro.core.carbon import CarbonIntensityTrace
 from repro.core.engine import PAPER_MODELS, M2CacheEngine
-from repro.serving import (ContinuousBatchScheduler, assign_slo_classes,
-                           bursty_trace, make_policy, poisson_trace,
-                           requests_from_trace, shared_prefix_trace)
+from repro.serving import (ROUTER_POLICIES, CarbonAutoscaler,
+                           ClusterRouter, ContinuousBatchScheduler,
+                           Replica, assign_slo_classes, bursty_trace,
+                           diurnal_trace, make_policy, poisson_trace,
+                           requests_from_trace, shared_prefix_trace,
+                           shifted_trace)
 
 
-def build_engine(args) -> M2CacheEngine:
+def build_engine(args, device_name=None) -> M2CacheEngine:
+    dev = {} if device_name is None else {"device_name": device_name}
     if args.paper_model:
         return M2CacheEngine(paper_model=args.paper_model, mode=args.mode,
                              hbm_policy=args.hbm_policy,
                              use_ssd=not args.no_ssd,
                              dram_capacity_gb=args.dram_gb, seed=args.seed,
                              batched_decode=not args.no_batched_decode,
-                             prefill_bucket=args.prefill_bucket)
+                             prefill_bucket=args.prefill_bucket, **dev)
     import jax
     import jax.numpy as jnp
     from repro.configs.base import get_config
@@ -61,7 +71,7 @@ def build_engine(args) -> M2CacheEngine:
                          use_ssd=not args.no_ssd,
                          dram_capacity_gb=args.dram_gb, seed=args.seed,
                          batched_decode=not args.no_batched_decode,
-                         prefill_bucket=args.prefill_bucket)
+                         prefill_bucket=args.prefill_bucket, **dev)
 
 
 def build_trace(args):
@@ -100,6 +110,13 @@ def build_workload(args, vocab_size=None):
             reuse_ratio=args.prefix_reuse, turns=args.turns,
             gen_len=tuple(args.gen_len),
             vocab_size=vocab_size or 50000, seed=args.seed)
+    elif args.workload == "diurnal":
+        events = diurnal_trace(
+            args.requests, period_s=args.period,
+            num_groups=args.prefix_groups,
+            prefix_len=args.shared_prefix_len,
+            reuse_ratio=args.prefix_reuse, gen_len=tuple(args.gen_len),
+            vocab_size=vocab_size or 50000, seed=args.seed)
     else:
         events = poisson_trace(args.requests, args.rate, seed=args.seed,
                                prompt_len=tuple(args.prompt_len),
@@ -108,6 +125,68 @@ def build_workload(args, vocab_size=None):
         events = assign_slo_classes(events, parse_slo_mix(args.slo),
                                     seed=args.seed)
     return events
+
+
+def run_cluster(args, prefix_on: bool):
+    """The ``--replicas > 1`` path: N heterogeneous replicas behind the
+    prefix-aware cluster router (docs/CLUSTER.md). Routing is
+    two-phase — all arrivals placed in time order, then each replica's
+    sub-trace served serially — so per-replica token streams are
+    byte-identical to serial single-replica runs."""
+    base_trace = build_trace(args)
+    n = args.replicas
+    devices = args.replica_devices.split(",") \
+        if args.replica_devices else [None]
+    if args.grid_shift == "spread":
+        shifts = [base_trace.period_s * i / n for i in range(n)]
+    elif args.grid_shift:
+        shifts = [float(s) for s in args.grid_shift.split(",")]
+    else:
+        shifts = None
+    recorder = None
+    if args.trace_out:
+        from repro.obs import TraceRecorder
+        recorder = TraceRecorder()
+    replicas, vocab = [], None
+    for i in range(n):
+        eng = build_engine(args, device_name=devices[i % len(devices)])
+        if eng.cfg is not None:
+            vocab = eng.cfg.vocab_size
+        ct = shifted_trace(base_trace, shifts[i % len(shifts)]) \
+            if shifts else base_trace
+        # each replica's scheduling policy reads its *own* grid slice
+        policy = make_policy(args.policy, trace=ct,
+                             threshold_g_kwh=args.carbon_threshold)
+        replicas.append(Replica(
+            f"r{i}", eng, carbon_trace=ct, trace=recorder,
+            max_batch=args.max_batch, hbm_kv_gb=args.hbm_kv_gb,
+            dram_kv_gb=args.dram_kv_gb, policy=policy,
+            prefill_chunk=args.prefill_chunk,
+            kv_prefetch=not args.no_kv_prefetch,
+            kv_precision=None if args.no_kv_quant else args.kv_precision,
+            prefix_caching=prefix_on,
+            prefix_capacity_tokens=args.prefix_capacity,
+            prefix_carbon_aware=args.prefix_carbon_aware))
+    scaler = CarbonAutoscaler(base_trace) if args.autoscale else None
+    router = ClusterRouter(replicas, policy=args.router,
+                           autoscaler=scaler, trace=recorder)
+    events = build_workload(args, vocab)
+    report = router.run(events, vocab_size=vocab,
+                        horizon_s=args.horizon)
+    out = {
+        "summary": report.summary(),
+        "replicas": {r.name: {"summary": r.report.summary(),
+                              "device": r.device_name,
+                              "assigned": len(r.events),
+                              "drain_windows": r.drain_windows}
+                     for r in router.replicas},
+        "router": {"policy": args.router,
+                   "decisions": report.decisions},
+    }
+    if recorder is not None:
+        recorder.export_chrome(args.trace_out)
+        out["obs"] = recorder.stats()
+    print(json.dumps(out, indent=1, default=float))
 
 
 def main():
@@ -122,9 +201,48 @@ def main():
                     choices=["atu", "lru", "none"])
     ap.add_argument("--no-ssd", action="store_true")
     ap.add_argument("--dram-gb", type=float, default=6.0)
+    # fleet (docs/CLUSTER.md): >1 replicas serve behind a cluster router
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1 builds a replica fleet behind the cluster "
+                         "router: each replica is its own engine + "
+                         "scheduler + tiered cache + radix tree + "
+                         "carbon accountant (docs/CLUSTER.md)")
+    ap.add_argument("--router", default="prefix",
+                    choices=list(ROUTER_POLICIES),
+                    help="cluster balancing policy: round-robin | "
+                         "least-loaded | prefix (affinity to the "
+                         "replica already holding the prompt's blocks) "
+                         "| carbon (affinity, then the cleanest grid "
+                         "slice within a load-imbalance bound)")
+    ap.add_argument("--replica-devices", default=None, metavar="A,B,...",
+                    help="comma list of carbon-model device names "
+                         "(repro.core.carbon.DEVICES), cycled across "
+                         "replicas — a heterogeneous fleet of old and "
+                         "new GPUs (default: every replica rtx3090)")
+    ap.add_argument("--grid-shift", default=None, metavar="S0,S1,..|spread",
+                    help="per-replica phase shift (modeled s) of the "
+                         "periodic --carbon-trace, cycled; 'spread' "
+                         "offsets replica i by i*period/N — replicas "
+                         "in different grid regions, which is what the "
+                         "carbon router exploits")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="carbon-driven replica drain/park: the dirtier "
+                         "the (unshifted) grid trace, the fewer "
+                         "replicas accept new work; parked replicas "
+                         "finish in-flight requests and bill deep-idle "
+                         "power")
+    ap.add_argument("--horizon", type=float, default=None, metavar="S",
+                    help="bill every replica's idle base power out to "
+                         "a fixed serving window (modeled s) so gCO2 "
+                         "totals compare across router policies")
     # workload
     ap.add_argument("--workload", default="poisson",
-                    choices=["poisson", "bursty", "shared-prefix"])
+                    choices=["poisson", "bursty", "shared-prefix",
+                             "diurnal"])
+    ap.add_argument("--period", type=float, default=240.0,
+                    help="modeled seconds per day cycle (diurnal "
+                         "workload; match --carbon-trace diurnal's "
+                         "period)")
     ap.add_argument("--prefix-groups", type=int, default=4,
                     help="distinct shared system prompts "
                          "(shared-prefix workload)")
@@ -178,11 +296,13 @@ def main():
     ap.add_argument("--no-kv-quant", action="store_true",
                     help="force fp16 on every KV tier (byte-identical "
                          "paging), overriding --kv-precision")
-    ap.add_argument("--prefix-cache", default=False,
+    ap.add_argument("--prefix-cache", default=None,
                     action=argparse.BooleanOptionalAction,
                     help="--prefix-cache enables radix-tree KV prefix "
                          "reuse across requests (--no-prefix-cache "
-                         "recomputes every prompt, the default)")
+                         "recomputes every prompt; the default is off "
+                         "single-replica, on when --replicas > 1 — the "
+                         "router's affinity exists to feed it)")
     ap.add_argument("--prefix-capacity", type=int, default=65536,
                     help="prefix-cache budget in cached tokens")
     ap.add_argument("--prefix-carbon-aware", action="store_true",
@@ -248,13 +368,35 @@ def main():
     args = ap.parse_args()
     if args.alert_rules and not args.health_out:
         ap.error("--alert-rules requires --health-out")
-    if not args.prefix_cache and (args.prefix_carbon_aware
-                                  or args.prefix_capacity != 65536
-                                  or args.prefix_persist):
+    # unset --prefix-cache means off single-replica, on in cluster mode
+    prefix_on = (args.prefix_cache if args.prefix_cache is not None
+                 else args.replicas > 1)
+    if not prefix_on and (args.prefix_carbon_aware
+                          or args.prefix_capacity != 65536
+                          or args.prefix_persist):
         ap.error("--prefix-carbon-aware/--prefix-capacity/"
                  "--prefix-persist require --prefix-cache")
     if args.prefix_persist_interval and not args.prefix_persist:
         ap.error("--prefix-persist-interval requires --prefix-persist")
+    if args.replicas > 1:
+        unsupported = [f for f, v in (
+            ("--fault-plan", args.fault_plan), ("--ledger", args.ledger),
+            ("--health-out", args.health_out),
+            ("--metrics-out", args.metrics_out),
+            ("--block-trace-out", args.block_trace_out),
+            ("--prefix-persist", args.prefix_persist)) if v]
+        if unsupported:
+            ap.error(f"{', '.join(unsupported)} not supported with "
+                     "--replicas > 1 (see docs/CLUSTER.md)")
+        if args.grid_shift and not build_trace(args).period_s:
+            ap.error("--grid-shift needs a periodic --carbon-trace "
+                     "(square or diurnal)")
+        run_cluster(args, prefix_on)
+        return
+    if args.grid_shift or args.autoscale or args.replica_devices \
+            or args.horizon is not None:
+        ap.error("--grid-shift/--autoscale/--replica-devices/--horizon "
+                 "require --replicas > 1")
 
     eng = build_engine(args)
     vocab = eng.cfg.vocab_size if eng.cfg is not None else None
@@ -301,7 +443,7 @@ def main():
                                      kv_prefetch=not args.no_kv_prefetch,
                                      kv_precision=None if args.no_kv_quant
                                      else args.kv_precision,
-                                     prefix_caching=args.prefix_cache,
+                                     prefix_caching=prefix_on,
                                      prefix_capacity_tokens=
                                      args.prefix_capacity,
                                      prefix_carbon_aware=

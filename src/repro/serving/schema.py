@@ -18,6 +18,10 @@ key set:
 ``SUMMARY_REQUIRED`` keys appear in every summary. ``SUMMARY_OPTIONAL``
 keys appear conditionally (prefix cache attached, SLOs present);
 ``SUMMARY_OPTIONAL_PREFIXES`` covers the per-SLO-class family.
+``CLUSTER_SUMMARY_REQUIRED``/``validate_cluster_summary`` do the same
+job for ``ClusterReport.summary()`` (serving/cluster.py) — cluster
+summaries are fingerprinted by ``router`` where per-replica summaries
+carry ``policy``, so a walker never confuses the two.
 """
 from __future__ import annotations
 
@@ -48,6 +52,25 @@ SUMMARY_OPTIONAL = frozenset({
 #: key families whose suffix is data-dependent (one per SLO class)
 SUMMARY_OPTIONAL_PREFIXES = ("slo_attainment_",)
 
+#: the ClusterReport.summary() schema (serving/cluster.py). Cluster
+#: summaries carry ``router`` — deliberately NOT ``policy`` — so the
+#: :func:`looks_like_summary` fingerprint never mistakes one for a
+#: per-replica summary when validators walk a BENCH artifact.
+CLUSTER_SUMMARY_REQUIRED = frozenset({
+    "router", "replicas", "requests", "total_tokens", "modeled_span_s",
+    "tokens_per_s", "gco2_total", "gco2_per_request",
+    "cluster_prefix_hit_rate", "affinity_routed", "balanced_routed",
+    "drains", "mean_intensity_g_kwh",
+})
+
+CLUSTER_SUMMARY_OPTIONAL = frozenset({
+    # requests carried SLOs (ClusterReport.slo_summary)
+    "slo_requests", "slo_attainment", "ttft_attainment",
+    "tpot_attainment", "deadline_attainment",
+    # any replica reported clean structured failures
+    "failed_requests",
+})
+
 
 def validate_summary(summary: Dict, *, context: str = "summary") -> Dict:
     """Raise ``ValueError`` on key drift; returns ``summary`` unchanged.
@@ -76,3 +99,31 @@ def looks_like_summary(doc: Dict) -> bool:
     JSON: a dict carrying these keys claims to be a serving summary."""
     return isinstance(doc, dict) and "tokens_per_s" in doc \
         and "policy" in doc
+
+
+def validate_cluster_summary(summary: Dict, *,
+                             context: str = "cluster summary") -> Dict:
+    """:func:`validate_summary`'s twin for ``ClusterReport.summary()``:
+    raise ``ValueError`` on key drift, return ``summary`` unchanged."""
+    keys = set(summary)
+    missing = CLUSTER_SUMMARY_REQUIRED - keys
+    unknown = {k for k in keys - CLUSTER_SUMMARY_REQUIRED
+               - CLUSTER_SUMMARY_OPTIONAL
+               if not k.startswith(SUMMARY_OPTIONAL_PREFIXES)}
+    problems = []
+    if missing:
+        problems.append(f"missing required keys {sorted(missing)}")
+    if unknown:
+        problems.append(f"unknown keys {sorted(unknown)} "
+                        "(update repro/serving/schema.py)")
+    if problems:
+        raise ValueError(f"{context}: cluster summary schema drift: "
+                         + "; ".join(problems))
+    return summary
+
+
+def looks_like_cluster_summary(doc: Dict) -> bool:
+    """Fingerprint for cluster summaries: ``router`` where per-replica
+    summaries carry ``policy``."""
+    return isinstance(doc, dict) and "tokens_per_s" in doc \
+        and "router" in doc

@@ -8,7 +8,10 @@ decides who meets their TTFT); ``closed_trace`` releases everything at
 t=0 (the offline-batch model); ``shared_prefix_trace`` generates
 chat-style conversations whose prompts share token-ID prefixes (system
 prompts reused across requests, multi-turn histories re-sent every
-turn) — the traffic that makes the radix prefix cache matter. Traces
+turn) — the traffic that makes the radix prefix cache matter;
+``diurnal_trace`` samples million-user-scale day-cycle traffic
+(sinusoidal-rate Poisson arrivals + shared prefixes) for the cluster
+router and its carbon autoscaler (``serving/cluster.py``). Traces
 are plain event lists so recorded production traces can be replayed
 through ``requests_from_trace`` unchanged. Events may carry an
 ``slo_class`` naming an entry of ``repro.serving.request.SLO_CLASSES``;
@@ -132,6 +135,71 @@ def shared_prefix_trace(n: int, *, rate_rps: float = 2.0,
             arr += float(rng.exponential(think_time_s))
     events.sort(key=lambda e: e.arrival_s)
     return [dataclasses.replace(e, rid=i) for i, e in enumerate(events)]
+
+
+def diurnal_trace(n: int, *, period_s: float = 240.0,
+                  mean_rps: Optional[float] = None,
+                  peak_to_trough: float = 4.0, peak_at: float = 0.5,
+                  num_groups: int = 8, prefix_len: int = 64,
+                  reuse_ratio: float = 0.8,
+                  suffix_len: Tuple[int, int] = (8, 24),
+                  gen_len: Tuple[int, int] = (16, 32),
+                  vocab_size: int = 50000,
+                  seed: int = 0) -> List[ArrivalEvent]:
+    """Diurnal shared-prefix traffic — the cluster router's workload.
+
+    Arrivals are a nonhomogeneous Poisson process (thinning) whose rate
+    follows a sinusoidal day cycle on the modeled clock: one period is
+    ``period_s`` seconds (matching
+    ``CarbonIntensityTrace.diurnal(period_s=...)``), the peak/trough
+    rate ratio is ``peak_to_trough`` and the rate peaks at fraction
+    ``peak_at`` of the period — 0.5 by default, i.e. traffic peaks
+    half a day after the grid-intensity peak (midday solar trough), so
+    by default the busy hours are the *clean* hours. ``mean_rps``
+    defaults to ``n / period_s`` so the ``n`` sampled events span about
+    one modeled day. Prompt structure matches
+    :func:`shared_prefix_trace`: with probability ``reuse_ratio`` a
+    prompt opens with one of ``num_groups`` deterministic shared system
+    prompts, and explicit ``prompt_tokens`` are pinned so prefixes
+    collide byte-for-byte.
+
+    Scale semantics: this is a *statistical sample* of million-user
+    traffic, not a literal replay. A fleet serving 1M users at ~10
+    requests/user/day sees ~115 req/s of wall-clock traffic; with the
+    repo's convention of one modeled day = ``period_s`` seconds that
+    compresses to thousands of modeled req/s. Raise ``n``/``mean_rps``
+    to densify the sample — the diurnal shape, the peak-to-trough
+    ratio and the prefix-sharing structure (what routers and
+    autoscalers actually react to) are preserved at any ``n``.
+    """
+    if peak_to_trough < 1.0:
+        raise ValueError("peak_to_trough must be >= 1")
+    rng = np.random.default_rng(seed)
+    lam = mean_rps if mean_rps is not None else max(n / period_s, 1e-9)
+    amp = (peak_to_trough - 1.0) / (peak_to_trough + 1.0)
+    lam_max = lam * (1.0 + amp)
+    group_prefix = [rng.integers(0, vocab_size, prefix_len).tolist()
+                    for _ in range(num_groups)]
+    events = []
+    t, rid = 0.0, 0
+    while rid < n:
+        t += float(rng.exponential(1.0 / lam_max))
+        rate = lam * (1.0 + amp * np.cos(
+            2.0 * np.pi * (t / period_s - peak_at)))
+        if rng.random() > rate / lam_max:        # thinning rejection
+            continue
+        if rng.random() < reuse_ratio:
+            toks = list(group_prefix[int(rng.integers(num_groups))])
+        else:
+            toks = rng.integers(0, vocab_size, prefix_len).tolist()
+        sfx = int(rng.integers(suffix_len[0], suffix_len[1] + 1))
+        toks = toks + rng.integers(0, vocab_size, sfx).tolist()
+        events.append(ArrivalEvent(
+            rid=rid, arrival_s=t, prompt_len=len(toks),
+            max_new_tokens=int(rng.integers(gen_len[0], gen_len[1] + 1)),
+            prompt_tokens=tuple(toks)))
+        rid += 1
+    return events
 
 
 def assign_slo_classes(events: Sequence[ArrivalEvent],

@@ -1,0 +1,217 @@
+"""Fleet layer (serving/cluster.py): shadow radix index, phase-shifted
+grid traces, diurnal workload shape, router placement invariants
+(same-prefix co-location, round-robin spread, drained-no-admissions),
+cluster summary consistency, and the two-phase byte-identity guarantee
+against serial single-replica runs."""
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonIntensityTrace
+from repro.core.engine import M2CacheEngine
+from repro.serving import (CarbonAutoscaler, ClusterRouter, Replica,
+                           ShadowRadixIndex, diurnal_trace,
+                           looks_like_cluster_summary,
+                           looks_like_summary, shifted_trace,
+                           validate_cluster_summary)
+
+
+def _replica(name, tmp_path, *, carbon_trace=None, **kw):
+    eng = M2CacheEngine(paper_model="llama-7b", dram_capacity_gb=6.0,
+                        ssd_dir=str(tmp_path / name))
+    kw.setdefault("max_batch", 4)
+    return Replica(name, eng, carbon_trace=carbon_trace, **kw)
+
+
+def _events(n=12, *, groups=3, reuse=1.0, seed=0):
+    return diurnal_trace(n, period_s=120.0, num_groups=groups,
+                         prefix_len=48, reuse_ratio=reuse,
+                         suffix_len=(4, 8), gen_len=(3, 5), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# ShadowRadixIndex
+
+
+def test_shadow_radix_block_granular_match():
+    idx = ShadowRadixIndex(block_tokens=4)
+    toks = list(range(10))               # 10 tokens -> 2 usable blocks
+    assert idx.insert(toks) == 2
+    assert idx.blocks == 2
+    # full match is capped one block short of the prompt length
+    assert idx.match_tokens(toks) == 8
+    # shared first block only
+    assert idx.match_tokens(list(range(4)) + [99] * 6) == 4
+    assert idx.match_tokens([77] * 10) == 0
+    # re-insert adds nothing; extending adds the new block only
+    assert idx.insert(toks) == 0
+    assert idx.insert(list(range(13))) == 1
+    assert idx.blocks == 3
+
+
+def test_shadow_radix_short_prompt_never_matches():
+    idx = ShadowRadixIndex(block_tokens=16)
+    idx.insert(list(range(16)))          # (16-1)//16 == 0 usable blocks
+    assert idx.blocks == 0
+    assert idx.match_tokens(list(range(16))) == 0
+
+
+# ---------------------------------------------------------------------------
+# shifted_trace
+
+
+def test_shifted_trace_reads_base_at_offset():
+    base = CarbonIntensityTrace.diurnal(period_s=240.0)
+    sh = shifted_trace(base, 80.0)
+    for t in np.linspace(0.0, 700.0, 113):
+        assert sh.intensity_at(t) == pytest.approx(
+            base.intensity_at(t + 80.0))
+
+
+def test_shifted_trace_rejects_aperiodic_and_passes_zero():
+    base = CarbonIntensityTrace.diurnal(period_s=240.0)
+    assert shifted_trace(base, 0.0) is base
+    with pytest.raises(ValueError):
+        shifted_trace(CarbonIntensityTrace.constant(), 10.0)
+
+
+# ---------------------------------------------------------------------------
+# diurnal workload
+
+
+def test_diurnal_trace_shape_and_pinned_prompts():
+    ev = diurnal_trace(200, period_s=100.0, peak_at=0.25, seed=3)
+    assert len(ev) == 200
+    times = [e.arrival_s for e in ev]
+    assert times == sorted(times)
+    for e in ev:
+        assert e.prompt_tokens is not None
+        assert len(e.prompt_tokens) == e.prompt_len
+    # more arrivals land in the half-period around the peak than in the
+    # half around the trough
+    near_peak = sum(1 for t in times
+                    if abs((t / 100.0 - 0.25 + 0.5) % 1.0 - 0.5) < 0.25)
+    assert near_peak > len(ev) - near_peak
+    # shared groups collide byte-for-byte
+    prefixes = {e.prompt_tokens[:48] for e in ev}
+    assert len(prefixes) < len(ev)
+
+
+# ---------------------------------------------------------------------------
+# router placement invariants
+
+
+def test_prefix_policy_colocates_groups(tmp_path):
+    reps = [_replica(f"r{i}", tmp_path) for i in range(3)]
+    router = ClusterRouter(reps, policy="prefix")
+    router.route(_events(12, groups=3, reuse=1.0))
+    owner = {}
+    for r in reps:
+        for e in r.events:
+            g = e.prompt_tokens[:48]
+            assert owner.setdefault(g, r.name) == r.name, \
+                "same shared prefix split across replicas"
+    assert len(owner) == 3
+    assert router.decisions["affinity_routed"] > 0
+
+
+def test_round_robin_spreads_evenly(tmp_path):
+    reps = [_replica(f"r{i}", tmp_path) for i in range(3)]
+    router = ClusterRouter(reps, policy="round-robin")
+    router.route(_events(12))
+    counts = [len(r.events) for r in reps]
+    assert sum(counts) == 12
+    assert max(counts) - min(counts) <= 1
+    assert router.decisions["affinity_routed"] == 0
+
+
+def test_drained_replicas_admit_nothing(tmp_path):
+    # dirty first half of the square cycle -> the autoscaler parks the
+    # tail replicas; arrivals in that window must all land on r0
+    sq = CarbonIntensityTrace.square(high=700.0, low=100.0,
+                                     high_s=60.0, low_s=60.0)
+    reps = [_replica(f"r{i}", tmp_path, carbon_trace=sq)
+            for i in range(3)]
+    router = ClusterRouter(reps, policy="prefix",
+                           autoscaler=CarbonAutoscaler(sq))
+    router.route(_events(24, seed=5))
+    assert router.decisions["drains"] > 0
+    for r in reps:
+        for e in r.events:
+            assert not r.drained_at(e.arrival_s)
+    assert not reps[0].drain_windows    # min_replicas keeps r0 up
+    dirty = [e for r in reps for e in r.events
+             if e.arrival_s % 120.0 < 60.0]
+    assert dirty and all(
+        e in reps[0].events for e in dirty)
+
+
+def test_unknown_policy_and_duplicate_names_rejected(tmp_path):
+    reps = [_replica("a", tmp_path)]
+    with pytest.raises(ValueError):
+        ClusterRouter(reps, policy="bogus")
+    with pytest.raises(ValueError):
+        ClusterRouter([_replica("x", tmp_path, ),
+                       _replica("x", tmp_path / "2")])
+
+
+# ---------------------------------------------------------------------------
+# cluster report
+
+
+def test_cluster_summary_sums_replica_reports(tmp_path):
+    reps = [_replica(f"r{i}", tmp_path) for i in range(3)]
+    router = ClusterRouter(reps, policy="prefix")
+    report = router.run(_events(12), horizon_s=150.0)
+    s = report.summary()
+    assert looks_like_cluster_summary(s)
+    assert not looks_like_summary(s)     # never mistaken for a replica's
+    validate_cluster_summary(s)
+    per = [r.report.summary() for r in reps]
+    assert all(looks_like_summary(p) for p in per)
+    assert s["requests"] == sum(p["requests"] for p in per) == 12
+    assert s["total_tokens"] == sum(p["total_tokens"] for p in per)
+    assert s["gco2_total"] == pytest.approx(
+        sum(p["gco2_total"] for p in per))
+    assert s["modeled_span_s"] == max(p["modeled_span_s"] for p in per)
+    assert s["affinity_routed"] + s["balanced_routed"] == 12
+
+
+def test_cluster_tokens_union_of_replicas(tmp_path):
+    reps = [_replica(f"r{i}", tmp_path) for i in range(2)]
+    router = ClusterRouter(reps, policy="round-robin")
+    report = router.run(_events(8))
+    toks = report.tokens()
+    assert sorted(toks) == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# two-phase byte-identity (real tiny model)
+
+
+def test_replica_runs_identical_to_serial_single_replica(tmp_path, key):
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config("qwen2.5-14b", tiny=True)
+    params = T.init_params(key, cfg, dtype=jnp.float32, m2=True)
+
+    def real_replica(name):
+        eng = M2CacheEngine(cfg=cfg, params=params, dram_capacity_gb=0.5,
+                            ssd_dir=str(tmp_path / name))
+        return Replica(name, eng, max_batch=2)
+
+    ev = diurnal_trace(6, period_s=60.0, num_groups=2, prefix_len=24,
+                       reuse_ratio=1.0, suffix_len=(4, 4),
+                       gen_len=(3, 4), vocab_size=cfg.vocab_size, seed=1)
+    router = ClusterRouter([real_replica("r0"), real_replica("r1")],
+                           policy="prefix")
+    report = router.run(ev, vocab_size=cfg.vocab_size, horizon_s=80.0)
+    assert sorted(report.tokens()) == list(range(6))
+    for r in router.replicas:
+        solo = real_replica(f"solo-{r.name}")
+        solo.events = list(r.events)
+        solo.run(vocab_size=cfg.vocab_size, horizon_s=80.0)
+        assert solo.tokens() == r.tokens(), \
+            f"{r.name}: cluster run diverged from serial run"
+        for toks in solo.tokens().values():
+            assert all(isinstance(t, int) for t in toks)
